@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: timing + the paper's device/depth recipes."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.core.estimator import fine_tune_depth, stress_test_depth
+from repro.core.simulator import PAPER_DEVICES, profile_fn_for
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_us(fn: Callable[[], object], repeats: int = 5) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def finetuned_depths(npu_key: str, cpu_key: str, slo: float,
+                     seed: int = 0) -> Tuple[int, int]:
+    """The paper's 'fine-tuned in collaboration' depths: exhaustive local
+    search against the device's nominal latency curve (noise belongs to the
+    estimator-evaluation benchmark, table3)."""
+    import dataclasses
+    npu = dataclasses.replace(PAPER_DEVICES[npu_key], noise_std=0.0)
+    cpu = dataclasses.replace(PAPER_DEVICES[cpu_key], noise_std=0.0)
+    pn = profile_fn_for(npu, seed=seed)
+    pc = profile_fn_for(cpu, seed=seed)
+    dn = fine_tune_depth(pn, slo, start=stress_test_depth(pn, slo) or 8,
+                         radius=16)
+    dc = fine_tune_depth(pc, slo, start=max(stress_test_depth(pc, slo, 2), 4),
+                         radius=16)
+    return dn, dc
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,52 @@
+"""Real-engine microbenchmarks on this host: dispatch overhead of the queue
+manager (Algorithm 1) and the actual JAX embedder latency-vs-concurrency
+curve (the paper's Eq. 12, measured for real on this CPU)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, emit, time_us
+from repro.configs import get_config
+from repro.core.estimator import fit_latency
+from repro.core.queue_manager import Query, QueueManager
+from repro.core.windve import JaxEmbedderBackend
+from repro.models import embedder
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    # Algorithm-1 dispatch cost
+    qm = QueueManager(10 ** 6, 10 ** 6)
+    i = [0]
+
+    def dispatch():
+        i[0] += 1
+        qm.dispatch(Query(qid=i[0]))
+
+    rows.append(("engine/dispatch", time_us(dispatch, repeats=2000),
+                 "per-query Algorithm-1 routing cost"))
+
+    # real embedder: measured t(C) linearity on this host CPU
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+    be = JaxEmbedderBackend(cfg, params, max_tokens=32)
+
+    def batch_lat(c: int) -> float:
+        batch = [Query(qid=j, length=24) for j in range(c)]
+        import time as _t
+        t0 = _t.monotonic()
+        be.embed_batch(batch)
+        return _t.monotonic() - t0
+
+    cs = [1, 2, 4, 8, 16]
+    lats = [min(batch_lat(c) for _ in range(3)) for c in cs]
+    fit = fit_latency(cs, lats)
+    rows.append(("engine/jax-embedder-batch16", lats[-1] / 16 * 1e6,
+                 f"measured Eq.12 fit: alpha={fit.alpha*1e3:.2f}ms "
+                 f"beta={fit.beta*1e3:.2f}ms r2={fit.r2:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

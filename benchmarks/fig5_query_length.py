@@ -1,0 +1,50 @@
+"""Fig. 5: scalability with input query length (V100 + Xeon).
+
+Paper claims: longer queries shrink both pools' concurrency; at 1s SLO the
+CPU's additional concurrency hits 0 by length 500; at 2s it survives (~2)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, time_us
+from repro.core.estimator import fine_tune_depth
+from repro.core.simulator import PAPER_DEVICES, profile_fn_for
+
+LENGTHS = (75, 150, 300, 500)
+
+
+def depths_at(length: int, slo: float):
+    npu = PAPER_DEVICES["tesla-v100/bge"]
+    cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+    pn = profile_fn_for(npu, length=length)
+    pc = profile_fn_for(cpu, length=length)
+    dn = fine_tune_depth(pn, slo, start=100, radius=60)
+    dc = fine_tune_depth(pc, slo, start=30, radius=29)
+    return dn, dc
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for slo in (1.0, 2.0):
+        series = []
+        for ln in LENGTHS:
+            us = time_us(lambda l=ln, s=slo: depths_at(l, s))
+            dn, dc = depths_at(ln, slo)
+            series.append((ln, dn, dc))
+            rows.append((f"fig5/len{ln}@{slo:.0f}s", us,
+                         f"original={dn} additional={dc}"))
+        # paper claims encoded as derived checks
+        lens, dns, dcs = zip(*series)
+        mono = all(a >= b for a, b in zip(dns, dns[1:])) and \
+            all(a >= b for a, b in zip(dcs, dcs[1:]))
+        rows.append((f"fig5/monotone-degradation@{slo:.0f}s", 0.0,
+                     f"holds={mono} (paper: holds)"))
+        if slo == 1.0:
+            rows.append(("fig5/cpu-dies-at-500@1s", 0.0,
+                         f"additional={series[-1][2]} (paper: 0)"))
+        else:
+            rows.append(("fig5/cpu-survives-at-500@2s", 0.0,
+                         f"additional={series[-1][2]} (paper: 2)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,46 @@
+"""Fig. 6: scalability with CPU core count (Xeon E5-2690 pool).
+
+Paper claims: below ~44 cores the CPU brings no benefit at 1s SLO; the
+boundary drops to ~36 cores at 2s; more cores help until memory-bandwidth
+saturation."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, time_us
+from repro.core.affinity import NumaTopology, numa_crossings, plan_affinity
+from repro.core.estimator import fine_tune_depth
+from repro.core.simulator import PAPER_DEVICES, cpu_core_scaled, profile_fn_for
+
+CORES = (16, 28, 36, 44, 64, 96)
+
+
+def cpu_depth_at(cores: int, slo: float) -> int:
+    base = PAPER_DEVICES["xeon-e5-2690/bge"]
+    dev = cpu_core_scaled(base, cores=cores, full_cores=44)
+    return fine_tune_depth(profile_fn_for(dev), slo, start=30, radius=29)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for slo in (1.0, 2.0):
+        series = []
+        for cores in CORES:
+            us = time_us(lambda c=cores, s=slo: cpu_depth_at(c, s))
+            dc = cpu_depth_at(cores, slo)
+            series.append((cores, dc))
+            rows.append((f"fig6/cores{cores}@{slo:.0f}s", us,
+                         f"additional={dc}"))
+        boundary = next((c for c, d in series if d > 0), None)
+        rows.append((f"fig6/benefit-boundary@{slo:.0f}s", 0.0,
+                     f"first-useful-cores={boundary} "
+                     f"(paper: {44 if slo == 1.0 else 36})"))
+    # §4.4 affinity: the 128-core Kunpeng box plan is NUMA-clean
+    topo = NumaTopology(128, 4)
+    cores = plan_affinity(topo, 32)
+    rows.append(("fig6/affinity-plan-32c", 0.0,
+                 f"reverse-from={cores[0]} numa-crossings="
+                 f"{numa_crossings(topo, cores)} (paper: reverse, 0)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

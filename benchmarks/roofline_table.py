@@ -1,0 +1,70 @@
+"""§Roofline reporting: reads the dry-run JSONL records and emits the
+per-(arch x shape) roofline terms as benchmark rows.
+
+Run ``PYTHONPATH=src python -m repro.launch.dryrun`` first (or use the
+checked-in experiments/dryrun_16x16.jsonl)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row, emit
+
+DEFAULT_PATHS = ("experiments/dryrun_16x16.jsonl", "experiments/dryrun.jsonl")
+OPT_PATH = "experiments/dryrun_16x16_opt.jsonl"
+
+
+def load_records(path: str | None = None):
+    paths = [path] if path else list(DEFAULT_PATHS)
+    recs = {}
+    for p in paths:
+        if p and os.path.exists(p):
+            for line in open(p):
+                r = json.loads(line)
+                recs[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return recs
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/no-dryrun-data", 0.0,
+                 "run `python -m repro.launch.dryrun` first")]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "16x16":
+            continue
+        name = f"roofline/{arch}/{shape}"
+        if "skipped" in r:
+            rows.append((name, 0.0, f"SKIP: {r['skipped']}"))
+            continue
+        if "error" in r:
+            rows.append((name, 0.0, "ERROR (see dryrun log)"))
+            continue
+        rf = r["roofline"]
+        step_us = max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6
+        rows.append((name, step_us,
+                     f"dom={rf['dominant']} comp={rf['compute_s']*1e3:.1f}ms "
+                     f"mem={rf['memory_s']*1e3:.1f}ms "
+                     f"coll={rf['collective_s']*1e3:.1f}ms "
+                     f"useful={rf['useful_ratio']:.2f}"))
+    # optimized-preset deltas (§Perf) when available
+    opt = load_records(OPT_PATH) if os.path.exists(OPT_PATH) else {}
+    for (arch, shape, mesh), r in sorted(opt.items()):
+        if "roofline" not in r:
+            continue
+        base = recs.get((arch, shape, "16x16"))
+        if base is None or "roofline" not in base:
+            continue
+        rf, bf = r["roofline"], base["roofline"]
+        dom_b = max(bf["compute_s"], bf["memory_s"], bf["collective_s"])
+        dom_o = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append((f"roofline-opt/{arch}/{shape}", dom_o * 1e6,
+                     f"dominant {dom_b*1e3:.1f}ms -> {dom_o*1e3:.1f}ms "
+                     f"({dom_b/max(dom_o,1e-12):.1f}x) "
+                     f"[{r.get('opt','')}]"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

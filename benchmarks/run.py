@@ -1,0 +1,44 @@
+# One module per paper table/figure.  Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_bge",        # Table 1: bge concurrency vs FlagEmbedding
+    "benchmarks.table2_jina",       # Table 2: jina concurrency vs PyTorch
+    "benchmarks.table3_queue_depth",  # Table 3: estimator vs stress test
+    "benchmarks.fig4_fitting",      # Fig. 4: latency-concurrency fits
+    "benchmarks.fig5_query_length",  # Fig. 5: query-length scalability
+    "benchmarks.fig6_cpu_cores",    # Fig. 6: CPU-core scalability
+    "benchmarks.engine_microbench",  # real engine on this host
+    "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = False
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed = True
+            print(f"{modname},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

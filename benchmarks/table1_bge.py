@@ -1,0 +1,49 @@
+"""Table 1: WindVE vs FlagEmbedding (no offload) concurrency on bge.
+
+Four columns: (V100+Xeon, Atlas+Kunpeng) x (1s, 2s).  Derived value =
+"C_NPU+C_CPU improvement% (paper: X%)" so drift vs the published row is
+visible.  Timing = DES wall time for the burst experiment."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Row, emit, finetuned_depths, time_us
+from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.simulator import PAPER_DEVICES, ServingSimulator
+
+PAPER_ROWS = {
+    ("tesla-v100/bge", "xeon-e5-2690/bge", 1.0): (44, 8, 18.2),
+    ("tesla-v100/bge", "xeon-e5-2690/bge", 2.0): (96, 22, 22.3),
+    ("atlas-300i-duo/bge", "kunpeng-920/bge", 1.0): (84, 1, 1.2),
+    ("atlas-300i-duo/bge", "kunpeng-920/bge", 2.0): (172, 8, 4.7),
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for (nk, ck, slo), (p_n, p_c, p_imp) in PAPER_ROWS.items():
+        dn, dc = finetuned_depths(nk, ck, slo)
+        # depths are calibrated against the noisy profiles; the burst check
+        # runs on nominal latency (the paper fine-tunes collaboratively too)
+        npu = dataclasses.replace(PAPER_DEVICES[nk], noise_std=0.0)
+        cpu = dataclasses.replace(PAPER_DEVICES[ck], noise_std=0.0)
+
+        def burst():
+            base = ServingSimulator(npu, None, dn, 0, slo).run_burst(dn + dc + 8)
+            wind = ServingSimulator(npu, cpu, dn, dc, slo).run_burst(dn + dc + 8)
+            return base, wind
+
+        us = time_us(burst, repeats=3)
+        base, wind = burst()
+        imp = throughput_uplift(dn, dc) * 100
+        save = peak_saving(dn, dc) * 100
+        name = f"table1/{nk.split('/')[0]}+{ck.split('/')[0]}@{slo:.0f}s"
+        rows.append((name, us,
+                     f"C={dn}+{dc} improve={imp:.1f}% save={save:.1f}% "
+                     f"burst: {base.accepted}->{wind.accepted} accepted "
+                     f"viol={wind.violations} (paper: {p_n}+{p_c} {p_imp}%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,33 @@
+"""Table 2: WindVE vs plain PyTorch serving on the jina model."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, finetuned_depths, time_us
+from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.simulator import PAPER_DEVICES, ServingSimulator
+
+PAPER_ROWS = {
+    ("tesla-v100/jina", "xeon-e5-2690/jina", 1.0): (48, 11, 22.9),
+    ("tesla-v100/jina", "xeon-e5-2690/jina", 2.0): (112, 30, 26.7),
+    ("atlas-300i-duo/jina", "kunpeng-920/jina", 1.0): (128, 6, 4.6),
+    ("atlas-300i-duo/jina", "kunpeng-920/jina", 2.0): (256, 20, 7.8),
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for (nk, ck, slo), (p_n, p_c, p_imp) in PAPER_ROWS.items():
+        dn, dc = finetuned_depths(nk, ck, slo)
+        npu, cpu = PAPER_DEVICES[nk], PAPER_DEVICES[ck]
+        us = time_us(lambda: ServingSimulator(npu, cpu, dn, dc, slo)
+                     .run_burst(dn + dc), repeats=3)
+        imp = throughput_uplift(dn, dc) * 100
+        save = peak_saving(dn, dc) * 100
+        name = f"table2/{nk.split('/')[0]}+{ck.split('/')[0]}@{slo:.0f}s"
+        rows.append((name, us,
+                     f"C={dn}+{dc} improve={imp:.1f}% save={save:.1f}% "
+                     f"(paper: {p_n}+{p_c} {p_imp}%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,49 @@
+"""Table 3: queue depths via linear regression vs stress test vs fine-tune.
+
+Derived cell mirrors the paper's three-row structure per device x SLO, with
+the published values in brackets.  Timing compares the COST of the two
+procedures: the estimator needs |probe_points| profiling runs, the stress
+test needs C_max/step runs — the paper's efficiency argument, measured."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, time_us
+from repro.core.estimator import (estimate_depth, fine_tune_depth,
+                                  stress_test_depth)
+from repro.core.simulator import PAPER_DEVICES, profile_fn_for
+
+PAPER = {
+    # device: {slo: (regression, stress, fine-tuned)}
+    "tesla-v100/bge": {1.0: (40, 40, 44), 2.0: (96, 88, 96)},
+    "xeon-e5-2690/bge": {1.0: (8, 6, 8), 2.0: (20, 18, 22)},
+    "atlas-300i-duo/bge": {1.0: (84, 80, 84), 2.0: (195, 176, 172)},
+    "kunpeng-920/bge": {1.0: (2, 2, 2), 2.0: (15, 12, 8)},
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for dev, slos in PAPER.items():
+        d = PAPER_DEVICES[dev]
+        for slo, (p_reg, p_st, p_ft) in slos.items():
+            profile_calls = {"n": 0}
+
+            def p(c, _d=d):
+                profile_calls["n"] += 1
+                return profile_fn_for(_d, seed=2)(c)
+
+            est, fit = estimate_depth(p, slo)
+            est_calls = profile_calls["n"]
+            st = stress_test_depth(p, slo, step=8)
+            stress_calls = profile_calls["n"] - est_calls
+            ft = fine_tune_depth(p, slo, start=max(est, 1), radius=16)
+            us = time_us(lambda: estimate_depth(profile_fn_for(d), slo))
+            rows.append((
+                f"table3/{dev.split('/')[0]}@{slo:.0f}s", us,
+                f"reg={est} stress={st} ft={ft} "
+                f"(paper: {p_reg}/{p_st}/{p_ft}) "
+                f"profiles: {est_calls} vs {stress_calls} runs"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,27 @@
+"""Train a small LM end to end (data stream -> remat'd train step -> AdamW
+-> checkpoint), using the same step builder the 72B production config lowers
+through in the dry-run.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/windve_lm.npz")
+    args = ap.parse_args()
+    _, _, losses = train(args.arch, args.steps, args.batch, args.seq,
+                         smoke=True, ckpt=args.ckpt, lr=1e-3, log_every=10)
+    print(f"first-10 mean loss {sum(losses[:10])/10:.3f} -> "
+          f"last-10 mean loss {sum(losses[-10:])/10:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+# The paper's primary contribution: CPU-NPU collaborative vector-embedding
+# serving (WindVE).  Queue manager (Alg. 1), device detector (Alg. 2),
+# linear-regression queue-depth estimator (Eq. 12), cost model (Eqs. 1-6),
+# affinity planner (§4.4), calibrated discrete-event simulator and the real
+# threaded serving engine.
+from repro.core import (affinity, cost_model, device_detector, estimator,
+                        queue_manager, simulator, windve)
+
+__all__ = ["affinity", "cost_model", "device_detector", "estimator",
+           "queue_manager", "simulator", "windve"]

@@ -1,0 +1,96 @@
+"""Online queue-depth re-calibration — beyond-paper extension of §4.2.2.
+
+The paper fits Eq. 12 once, offline, from dedicated profiling runs.  In
+production the (alpha, beta) drift (thermal throttling, co-located load,
+query-length mix — their §5.4 shows both knobs move the curve), so WindVE
+here keeps a rolling window of REAL (batch_size, service_latency)
+observations per device and periodically refits the line, shrinking or
+growing the queue depths while the SLO contract holds.
+
+The estimator stays the paper's exact linear model; only the data source
+changes (live traffic instead of offline probes).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional, Tuple
+
+from repro.core.estimator import LatencyFit, fit_latency
+
+
+@dataclass
+class Observation:
+    concurrency: int
+    latency_s: float
+
+
+class OnlineCalibrator:
+    """Rolling-window Eq. 12 refit per device."""
+
+    def __init__(self, slo_s: float, window: int = 256,
+                 min_points: int = 8, headroom: float = 0.95):
+        self.slo = slo_s
+        self.window = window
+        self.min_points = min_points
+        self.headroom = headroom          # aim below the SLO by this factor
+        self._obs: Dict[str, Deque[Observation]] = {}
+        self._lock = threading.Lock()
+
+    def observe(self, device: str, concurrency: int, latency_s: float) -> None:
+        with self._lock:
+            q = self._obs.setdefault(device, deque(maxlen=self.window))
+            q.append(Observation(concurrency, latency_s))
+
+    def n_observations(self, device: str) -> int:
+        with self._lock:
+            return len(self._obs.get(device, ()))
+
+    def fit(self, device: str) -> Optional[LatencyFit]:
+        with self._lock:
+            obs = list(self._obs.get(device, ()))
+        # need at least two distinct concurrency levels for a line
+        if len(obs) < self.min_points or \
+                len({o.concurrency for o in obs}) < 2:
+            return None
+        return fit_latency([o.concurrency for o in obs],
+                           [o.latency_s for o in obs])
+
+    def suggest_depth(self, device: str,
+                      current: int) -> Tuple[int, Optional[LatencyFit]]:
+        """New depth for ``device`` (falls back to ``current`` if the window
+        is not informative yet)."""
+        f = self.fit(device)
+        if f is None:
+            return current, None
+        return max(f.max_concurrency(self.slo * self.headroom), 0), f
+
+
+def attach(engine, calibrator: OnlineCalibrator,
+           refit_every: int = 64) -> None:
+    """Wire a calibrator into a running WindVE engine: every completed batch
+    feeds an observation; every ``refit_every`` completions the depths are
+    re-estimated and applied atomically."""
+    done = {"n": 0}
+    orig = {}
+
+    for device, backend in engine.backends.items():
+        orig[device] = backend.embed_batch
+
+        def wrapped(batch, _d=device, _f=orig[device]):
+            import time as _t
+
+            t0 = _t.monotonic()
+            out = _f(batch)
+            calibrator.observe(_d, len(batch), _t.monotonic() - t0)
+            done["n"] += len(batch)
+            if done["n"] >= refit_every:
+                done["n"] = 0
+                for dev, q in engine.qm.queues.items():
+                    new, _ = calibrator.suggest_depth(dev, q.depth)
+                    if new > 0 and new != q.depth:
+                        q.depth = new
+            return out
+
+        backend.embed_batch = wrapped

@@ -1,0 +1,68 @@
+"""Deployment-cost model — paper §3 (Eqs. 1-6) and §3.2 savings analysis.
+
+Two provisioning regimes:
+* throughput-provisioned (Eq. 5):  Cost = (N / n) / T * D * P
+* peak-provisioned       (Eq. 6):  Cost = N_peak / C * D * P
+
+and the §3.2 headline results for CPU offloading:
+* peak-provisioned saving     = C_CPU / (C_CPU + C_NPU)
+* average-provisioned uplift  = C_CPU / C_NPU
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Deployment:
+    device_per_instance: int = 1     # D
+    price_per_device: float = 1.0    # P
+
+
+def waiting_slots(t_total_max: float, t_proc: float) -> int:
+    """Eq. 4: n = floor((t^max_total - t_proc) / t_proc) — how many other
+    queries may be processed while one waits without breaking the SLO."""
+    if t_proc <= 0:
+        raise ValueError("t_proc must be positive")
+    return max(0, math.floor((t_total_max - t_proc) / t_proc))
+
+
+def cost_throughput(n_queries_per_s: float, t_total_max: float,
+                    t_proc: float, throughput: float,
+                    d: Deployment = Deployment()) -> float:
+    """Eq. 5 — provision by average throughput T with n-deep waiting."""
+    n = max(1, waiting_slots(t_total_max, t_proc))
+    return (n_queries_per_s / n) / throughput * d.device_per_instance * \
+        d.price_per_device
+
+
+def cost_peak(n_peak: float, max_concurrency: float,
+              d: Deployment = Deployment()) -> float:
+    """Eq. 6 — provision by peak query rate over system max concurrency."""
+    if max_concurrency <= 0:
+        raise ValueError("max concurrency must be positive")
+    return n_peak / max_concurrency * d.device_per_instance * d.price_per_device
+
+
+def peak_saving(c_npu: int, c_cpu: int) -> float:
+    """§3.2: deployment-cost saving when peak-provisioned: C_CPU/(C_CPU+C_NPU)."""
+    if c_npu <= 0:
+        raise ValueError("c_npu must be positive")
+    return c_cpu / (c_cpu + c_npu)
+
+
+def throughput_uplift(c_npu: int, c_cpu: int) -> float:
+    """§3.2: average-throughput uplift: C_CPU/C_NPU (also the paper's
+    'concurrency improvement' in Tables 1-2)."""
+    if c_npu <= 0:
+        raise ValueError("c_npu must be positive")
+    return c_cpu / c_npu
+
+
+def concurrency_uplift_bound(alpha_npu: float, alpha_cpu: float) -> float:
+    """Ineq. 19: C_CPU/C_NPU < alpha_NPU/alpha_CPU — the uplift is bounded by
+    the device performance-gap ratio."""
+    if alpha_cpu <= 0:
+        raise ValueError("alpha_cpu must be positive")
+    return alpha_npu / alpha_cpu

@@ -1,0 +1,100 @@
+"""Linear-regression queue-depth estimator — paper §4.2.2 (Eq. 12).
+
+Observed (and assumed by SLSC and Mooncake, per the paper): processing
+latency is linear in concurrency,
+
+    t_proc(C) = alpha_d * C + beta_d ,   alpha_d, beta_d >= 0.
+
+Fit (alpha, beta) from a handful of profiling points, then the queue depth
+for SLO ``T`` is the largest C with t(C) <= T:
+
+    C_max = floor((T - beta) / alpha).
+
+Also provides the stress-test procedure (Eqs. 7-10) the paper compares
+against, so Table 3 can be reproduced with both methods.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LatencyFit:
+    alpha: float      # s per concurrent query
+    beta: float       # s fixed (model-load / dispatch) cost
+    r2: float
+
+    def latency(self, concurrency) -> np.ndarray:
+        return self.alpha * np.asarray(concurrency, dtype=float) + self.beta
+
+    def max_concurrency(self, slo_s: float) -> int:
+        """C_max = floor((T - beta)/alpha); 0 when even C=1 misses the SLO
+        (the paper's Eq. 11 'CPU cannot be used' case)."""
+        if self.latency(1) > slo_s:
+            return 0
+        if self.alpha <= 0:
+            return 10 ** 9  # degenerate flat fit: unbounded under this model
+        # epsilon guards exact-boundary float error ((1-0.4)/0.1 -> 5.999...)
+        return int(np.floor((slo_s - self.beta) / self.alpha + 1e-9))
+
+
+def fit_latency(concurrency: Sequence[float], latency_s: Sequence[float],
+                ) -> LatencyFit:
+    """Non-negative least squares fit of Eq. 12 (alpha, beta >= 0)."""
+    c = np.asarray(concurrency, dtype=float)
+    t = np.asarray(latency_s, dtype=float)
+    if c.size < 2:
+        raise ValueError("need >= 2 profiling points")
+    A = np.stack([c, np.ones_like(c)], axis=1)
+    (alpha, beta), *_ = np.linalg.lstsq(A, t, rcond=None)
+    # enforce the paper's alpha,beta >= 0 constraint by projected refit
+    if alpha < 0:
+        alpha, beta = 0.0, float(t.mean())
+    elif beta < 0:
+        beta = 0.0
+        alpha = float((c @ t) / (c @ c))
+    pred = alpha * c + beta
+    ss_res = float(((t - pred) ** 2).sum())
+    ss_tot = float(((t - t.mean()) ** 2).sum()) or 1e-12
+    return LatencyFit(float(alpha), float(beta), 1.0 - ss_res / ss_tot)
+
+
+def estimate_depth(profile_fn: Callable[[int], float], slo_s: float,
+                   probe_points: Sequence[int] = (1, 4, 16, 64),
+                   ) -> Tuple[int, LatencyFit]:
+    """The paper's fast estimator: profile a FEW concurrency points, fit
+    Eq. 12, and read the depth off the line (no exhaustive sweep)."""
+    pts = [(c, profile_fn(c)) for c in probe_points]
+    fit = fit_latency([p[0] for p in pts], [p[1] for p in pts])
+    return fit.max_concurrency(slo_s), fit
+
+
+def stress_test_depth(profile_fn: Callable[[int], float], slo_s: float,
+                      step: int = 8, c_max_bound: int = 4096) -> int:
+    """The baseline the paper compares against (§4.2.2): increase
+    concurrency by ``step`` until the SLO breaks; depth = last passing C.
+    The paper notes the step-size trade-off — a large step can overshoot the
+    true peak (their Table 3 Atlas/2s row) — which this reproduces."""
+    last_ok = 0
+    c = step
+    while c <= c_max_bound:
+        if profile_fn(c) <= slo_s:
+            last_ok = c
+        else:
+            break
+        c += step
+    return last_ok
+
+
+def fine_tune_depth(profile_fn: Callable[[int], float], slo_s: float,
+                    start: int, radius: int = 8) -> int:
+    """Refine an estimated depth (the paper's 'fine-tuned' Table 3 column):
+    search downward from start+radius and return the largest passing C —
+    robust to estimates that overshoot on noisy devices."""
+    for c in range(start + radius, 0, -1):
+        if profile_fn(c) <= slo_s:
+            return c
+    return 0

@@ -1,0 +1,71 @@
+"""LM generation backend: serve the ASSIGNED architectures through WindVE.
+
+The paper serves an embedding model; the same queue-manager technique
+applies to any jit-compiled request kind (DESIGN.md §4).  This backend runs
+prefill + greedy decode for the decoder-LM archs (dense / MoE / SSM /
+hybrid), so `WindVE(npu_backend=LMGenerateBackend(...), ...)` serves token
+generation with the identical Algorithm-1 dispatch, estimator calibration
+and BUSY semantics.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.queue_manager import Query
+from repro.core.windve import Backend
+
+
+class LMGenerateBackend(Backend):
+    """Batched prompt -> greedy continuation on the host CPU."""
+
+    def __init__(self, cfg, params, max_prompt: int = 64,
+                 max_new_tokens: int = 16):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import lm
+
+        self.cfg = cfg
+        self.params = params
+        self.max_prompt = max_prompt
+        self.max_new = max_new_tokens
+        self.name = f"jax-lm/{cfg.name}"
+        self._jax, self._jnp, self._lm = jax, jnp, lm
+
+        total = max_prompt + max_new_tokens
+        if cfg.frontend == "vision":
+            total += cfg.num_patches
+
+        def prefill(params, toks):
+            return lm.prefill(params, cfg, toks, max_len=total,
+                              cache_dtype=jnp.float32)
+
+        def decode(params, tok, cache):
+            logits, cache = lm.decode_step(params, cfg, tok, cache)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        """Returns the generated continuation token ids per query."""
+        jnp = self._jnp
+        B = len(queries)
+        toks = np.ones((B, self.max_prompt), np.int32)   # pad id 1
+        for i, q in enumerate(queries):
+            ids = q.payload
+            if ids is None:
+                ids = (np.arange(q.length) % (self.cfg.vocab_size - 2)) + 2
+            n = min(len(ids), self.max_prompt)
+            toks[i, -n:] = np.asarray(ids[:n], np.int32)  # right-aligned
+
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [tok]
+        for _ in range(self.max_new - 1):
+            tok, cache = self._decode(self.params, tok, cache)
+            outs.append(tok)
+        gen = np.stack([np.asarray(t) for t in outs], axis=1)  # (B, new)
+        return [gen[i] for i in range(B)]

@@ -1,0 +1,240 @@
+"""Discrete-event serving simulator with paper-calibrated device models.
+
+This CPU-only container has no NPU/GPU, so the paper's hardware is modeled:
+each device's processing latency under concurrency C follows the paper's
+Eq. 12 shape with a small convex term,
+
+    t_d(C) = beta_d + b_d * C + a_d * C^2 ,
+
+where (b_d, a_d) are solved EXACTLY from the paper's two stress-test anchors
+(C@1s, C@2s from Tables 1-3) and beta_d from Fig. 4.  The mild convexity is
+what the paper itself observed: its linear-regression estimator slightly
+undershoots the fine-tuned depth (Table 3, V100: regression 40 vs fine-tuned
+44) — this simulator reproduces that emergently.
+
+The DES engine drives the real queue manager (Algorithm 1) with arrival
+traces and measures e2e latency / SLO violations / busy rate, so the
+no-offload vs CPU-offload comparison (Tables 1-2) runs end to end.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.queue_manager import BUSY, CPU, NPU, Query, QueueManager
+
+
+# ---------------------------------------------------------------------------
+# calibrated device latency models
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    beta: float                  # fixed cost (Fig. 4 intercepts)
+    b: float                     # linear term
+    a: float                     # convex term (anchor-solved)
+    noise_std: float = 0.0       # relative noise (Atlas/Kunpeng outliers §5.3)
+    # query-length scaling (paper §5.4: latency grows with input length;
+    # default length 75 tokens is the paper's RAG segmentation setting)
+    ref_length: int = 75
+
+    def latency(self, concurrency: float, length: int = 75,
+                rng: Optional[random.Random] = None) -> float:
+        c = max(0.0, float(concurrency))
+        t = self.beta + self.b * c + self.a * c * c
+        # linear-in-length scaling of the compute part (embedding FLOPs are
+        # ~linear in tokens for fixed batch)
+        t = self.beta + (t - self.beta) * (length / self.ref_length)
+        if self.noise_std and rng is not None:
+            t *= max(0.1, 1.0 + rng.gauss(0.0, self.noise_std))
+        return t
+
+
+def solve_anchors(beta: float, c1: float, t1: float, c2: float, t2: float
+                  ) -> Tuple[float, float]:
+    """Solve (b, a) so beta + b*c + a*c^2 passes exactly through both
+    stress-test anchors (c1, t1), (c2, t2)."""
+    d1, d2 = t1 - beta, t2 - beta
+    det = c1 * c2 * c2 - c2 * c1 * c1
+    a = (c1 * d2 - c2 * d1) / det
+    b = (d1 - a * c1 * c1) / c1
+    return b, a
+
+
+def _mk(name: str, beta: float, c1: float, t1: float, c2: float, t2: float,
+        noise: float = 0.0) -> DeviceModel:
+    b, a = solve_anchors(beta, c1, t1, c2, t2)
+    if a < 0.0:
+        # anchors imply concavity for the given beta: fall back to the pure
+        # linear Eq. 12 through both anchors (beta refit, a = 0)
+        b = (t2 - t1) / (c2 - c1)
+        beta = t1 - b * c1
+        a = 0.0
+    return DeviceModel(name, beta, b, a, noise)
+
+
+# Anchors: Tables 1-3 (bge) and Table 2 (jina); betas: Fig. 4.
+PAPER_DEVICES: Dict[str, DeviceModel] = {
+    # bge-large-zh-v1.5 calibration
+    "tesla-v100/bge": _mk("tesla-v100/bge", 0.27, 44, 1.0, 96, 2.0),
+    "xeon-e5-2690/bge": _mk("xeon-e5-2690/bge", 0.32, 8, 1.0, 22, 2.0),
+    "atlas-300i-duo/bge": _mk("atlas-300i-duo/bge", 0.24, 84, 1.0, 172, 2.0,
+                              noise=0.03),
+    "kunpeng-920/bge": _mk("kunpeng-920/bge", 0.85, 2, 1.0, 8, 2.0,
+                           noise=0.05),
+    # jina calibration
+    "tesla-v100/jina": _mk("tesla-v100/jina", 0.25, 48, 1.0, 112, 2.0),
+    "xeon-e5-2690/jina": _mk("xeon-e5-2690/jina", 0.30, 11, 1.0, 30, 2.0),
+    "atlas-300i-duo/jina": _mk("atlas-300i-duo/jina", 0.22, 128, 1.0, 256, 2.0,
+                               noise=0.03),
+    "kunpeng-920/jina": _mk("kunpeng-920/jina", 0.80, 6, 1.0, 20, 2.0,
+                            noise=0.05),
+}
+
+
+def cpu_core_scaled(dev: DeviceModel, cores: int, full_cores: int = 44
+                    ) -> DeviceModel:
+    """§5.4 CPU-core scalability, calibrated to the paper's Fig. 6:
+
+    * above the knee (``full_cores``): near-linear speedup, capped at 2x —
+      "the concurrency can not be improved continuously after a border, due
+      to the bottleneck of host memory bandwidth";
+    * below the knee: a CLIFF — "the loss of computing ability leads to the
+      dramatical increase of CPU latency", i.e. <44 cores bring no benefit
+      at the 1s SLO and <36 none at 2s.  Modeled as 10^((full-cores)/8)."""
+    if cores <= 0:
+        raise ValueError("cores must be positive")
+    if cores >= full_cores:
+        scale = max(full_cores / cores, 0.5)      # bandwidth saturation cap
+    else:
+        scale = 10.0 ** ((full_cores - cores) / 8.0)
+    return DeviceModel(f"{dev.name}@{cores}c", dev.beta, dev.b * scale,
+                       dev.a * scale, dev.noise_std, dev.ref_length)
+
+
+# ---------------------------------------------------------------------------
+# discrete-event simulation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimResult:
+    completed: List[Query] = field(default_factory=list)
+    rejected: int = 0
+    slo: float = 1.0
+
+    @property
+    def accepted(self) -> int:
+        return len(self.completed)
+
+    @property
+    def violations(self) -> int:
+        return sum(1 for q in self.completed if q.e2e_latency > self.slo + 1e-9)
+
+    @property
+    def max_ok_concurrency(self) -> int:
+        """Largest number of simultaneously-resident queries that all met
+        the SLO (the paper's 'maximum concurrency' metric)."""
+        ok = [q for q in self.completed if q.e2e_latency <= self.slo + 1e-9]
+        return len(ok)
+
+    def throughput(self, window_s: float) -> float:
+        return self.accepted / window_s if window_s > 0 else 0.0
+
+
+class ServingSimulator:
+    """Event-driven WindVE: Algorithm-1 dispatch + batched device service."""
+
+    def __init__(self, npu: DeviceModel, cpu: Optional[DeviceModel],
+                 npu_depth: int, cpu_depth: int, slo_s: float,
+                 query_length: int = 75, seed: int = 0):
+        self.npu_model = npu
+        self.cpu_model = cpu
+        self.qm = QueueManager(npu_depth, cpu_depth,
+                               heter_enable=cpu is not None and cpu_depth > 0)
+        self.slo = slo_s
+        self.length = query_length
+        self.rng = random.Random(seed)
+
+    def run_burst(self, n_queries: int) -> SimResult:
+        """The paper's stress scenario: n queries arrive simultaneously."""
+        return self.run([(0.0, self.length)] * n_queries)
+
+    def run(self, arrivals: List[Tuple[float, int]]) -> SimResult:
+        """arrivals: list of (time, query_length)."""
+        res = SimResult(slo=self.slo)
+        # event key: (time, priority, seq) — device "kick"s run AFTER every
+        # same-instant arrival so a burst is batched, not started one-by-one
+        events: List[Tuple[float, int, int, str, object]] = []
+        for i, (t, ln) in enumerate(arrivals):
+            heapq.heappush(events, (t, 0, i, "arrive",
+                                    Query(qid=i, length=ln, arrival_t=t)))
+        free_at = {NPU: 0.0, CPU: 0.0}
+        models = {NPU: self.npu_model, CPU: self.cpu_model}
+        seq = len(arrivals)
+
+        def nseq() -> int:
+            nonlocal seq
+            seq += 1
+            return seq
+
+        def try_start(dev: str, now: float):
+            if models[dev] is None or free_at[dev] > now + 1e-12:
+                return
+            batch = self.qm.queues[dev].pop_batch(self.qm.depth(dev))
+            if not batch:
+                return
+            dur = models[dev].latency(len(batch), batch[0].length, self.rng)
+            done = now + dur
+            free_at[dev] = done
+            heapq.heappush(events, (done, 0, nseq(), "done", (dev, batch)))
+
+        while events:
+            now, _, _, kind, obj = heapq.heappop(events)
+            if kind == "arrive":
+                verdict = self.qm.dispatch(obj)
+                if verdict == BUSY:
+                    res.rejected += 1
+                else:
+                    heapq.heappush(events, (now, 1, nseq(), "kick", verdict))
+            elif kind == "kick":
+                try_start(obj, now)
+            else:
+                dev, batch = obj
+                for q in batch:
+                    q.done_t = now
+                    res.completed.append(q)
+                self.qm.queues[dev].finish(len(batch))
+                try_start(dev, now)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# stress / profile helpers used by the estimator benchmarks
+# ---------------------------------------------------------------------------
+
+def profile_fn_for(dev: DeviceModel, length: int = 75,
+                   seed: int = 0) -> Callable[[int], float]:
+    """Latency-at-concurrency probe (one batched execution, like the paper's
+    standalone profiling runs)."""
+    rng = random.Random(seed)
+    return lambda c: dev.latency(c, length, rng if dev.noise_std else None)
+
+
+def diurnal_trace(n_seconds: int, base_rate: float, peak_rate: float,
+                  length: int = 75, seed: int = 0) -> List[Tuple[float, int]]:
+    """Fig.-2-style day curve: sinusoidal rate between base and peak."""
+    rng = random.Random(seed)
+    out: List[Tuple[float, int]] = []
+    for s in range(n_seconds):
+        phase = math.sin(2 * math.pi * s / max(n_seconds, 1) - math.pi / 2)
+        rate = base_rate + (peak_rate - base_rate) * (phase + 1) / 2
+        n = rng.poissonvariate(rate) if hasattr(rng, "poissonvariate") else \
+            max(0, int(rng.gauss(rate, math.sqrt(max(rate, 1e-9)))))
+        for _ in range(n):
+            out.append((s + rng.random(), length))
+    out.sort()
+    return out

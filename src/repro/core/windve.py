@@ -1,0 +1,207 @@
+"""WindVE engine — the paper's full system (Fig. 3B), runnable for real.
+
+Pipeline: device detector -> queue depth calibration (linear-regression
+estimator) -> bounded two-tier queue manager (Algorithm 1) -> per-device
+worker threads draining their queue in batches, each worker owning its own
+model instance (the paper: "each instance employs its own model copy").
+
+Backends:
+* ``JaxEmbedderBackend`` — actually runs the bge/jina-style JAX embedder on
+  this host's CPU (the paper's CPU pool).
+* ``ModeledBackend``     — wall-clock sleeps per the calibrated DeviceModel
+  (stands in for the NPU/GPU pool on this accelerator-less container; on a
+  real TPU deployment this is replaced by the pjit'd embedder).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import estimator
+from repro.core.device_detector import DetectionResult
+from repro.core.queue_manager import BUSY, CPU, NPU, Query, QueueManager
+from repro.core.simulator import DeviceModel
+
+
+class Backend:
+    """A device pool able to embed a batch of queries."""
+
+    name = "backend"
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        raise NotImplementedError
+
+
+class ModeledBackend(Backend):
+    def __init__(self, model: DeviceModel, embed_dim: int = 1024):
+        self.model = model
+        self.embed_dim = embed_dim
+        self.name = model.name
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        dur = self.model.latency(len(queries), queries[0].length)
+        time.sleep(dur)
+        return [np.zeros(self.embed_dim, np.float32) for _ in queries]
+
+
+class JaxEmbedderBackend(Backend):
+    """Real JAX embedder running on the host CPU."""
+
+    def __init__(self, cfg, params, max_tokens: int = 128):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import embedder
+
+        self.cfg = cfg
+        self.params = params
+        self.max_tokens = max_tokens
+        self.name = f"jax-cpu/{cfg.name}"
+        self._embed = jax.jit(
+            lambda p, toks, mask: embedder.embed(p, cfg, toks, mask))
+        self._jnp = jnp
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        jnp = self._jnp
+        B = len(queries)
+        toks = np.zeros((B, self.max_tokens), np.int32)
+        mask = np.zeros((B, self.max_tokens), np.float32)
+        for i, q in enumerate(queries):
+            ids = q.payload
+            if ids is None:
+                ids = (np.arange(q.length) % (self.cfg.vocab_size - 1)) + 1
+            n = min(len(ids), self.max_tokens)
+            toks[i, :n] = np.asarray(ids[:n], np.int32)
+            mask[i, :n] = 1.0
+        out = np.asarray(self._embed(self.params, jnp.asarray(toks),
+                                     jnp.asarray(mask)))
+        return [out[i] for i in range(B)]
+
+
+@dataclass
+class EngineStats:
+    accepted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    latencies: List[float] = field(default_factory=list)
+    per_device: Dict[str, int] = field(default_factory=dict)
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
+
+
+class WindVE:
+    """The serving engine.  ``depths`` maps device -> C^max."""
+
+    def __init__(self, npu_backend: Optional[Backend],
+                 cpu_backend: Optional[Backend],
+                 npu_depth: int, cpu_depth: int,
+                 heter_enable: bool = True,
+                 max_batch: Optional[Dict[str, int]] = None,
+                 workers: Optional[Dict[str, int]] = None):
+        if npu_backend is None and cpu_backend is None:
+            raise ValueError("need at least one backend")
+        # single-device fallback: Algorithm 2 forces heter off and the sole
+        # device becomes the main queue
+        if npu_backend is None:
+            npu_backend, cpu_backend = cpu_backend, None
+            npu_depth, cpu_depth = cpu_depth or npu_depth, 0
+            heter_enable = False
+        self.backends: Dict[str, Backend] = {NPU: npu_backend}
+        if cpu_backend is not None and heter_enable:
+            self.backends[CPU] = cpu_backend
+        self.qm = QueueManager(npu_depth, cpu_depth if CPU in self.backends else 0,
+                               heter_enable=CPU in self.backends)
+        self.max_batch = max_batch or {}
+        self.stats = EngineStats()
+        self._futures: Dict[int, Future] = {}
+        self._qid = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._wake: Dict[str, threading.Event] = {
+            d: threading.Event() for d in self.backends}
+        # Algorithm 2's worker counts: N instances may drain one device
+        # queue (each instance owns its own model copy on real hardware)
+        workers = workers or {}
+        self._threads = [
+            threading.Thread(target=self._worker, args=(d,), daemon=True)
+            for d in self.backends
+            for _ in range(max(1, workers.get(d, 1)))]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, payload=None, length: int = 75) -> Optional[Future]:
+        """Dispatch one query per Algorithm 1.  None == BUSY (rejected)."""
+        with self._lock:
+            self._qid += 1
+            q = Query(qid=self._qid, payload=payload, length=length,
+                      arrival_t=time.monotonic())
+        verdict = self.qm.dispatch(q)
+        if verdict == BUSY:
+            self.stats.rejected += 1
+            return None
+        self.stats.accepted += 1
+        fut: Future = Future()
+        self._futures[q.qid] = fut
+        self._wake[verdict].set()
+        return fut
+
+    def _worker(self, device: str) -> None:
+        backend = self.backends[device]
+        queue = self.qm.queues[device]
+        max_b = self.max_batch.get(device, queue.depth)
+        while not self._stop.is_set():
+            batch = queue.pop_batch(max_b)
+            if not batch:
+                self._wake[device].wait(timeout=0.01)
+                self._wake[device].clear()
+                continue
+            try:
+                embs = backend.embed_batch(batch)
+            except Exception as e:  # pragma: no cover
+                embs = [e] * len(batch)
+            now = time.monotonic()
+            for q, emb in zip(batch, embs):
+                q.done_t = now
+                self.stats.completed += 1
+                self.stats.latencies.append(now - q.arrival_t)
+                self.stats.per_device[device] = \
+                    self.stats.per_device.get(device, 0) + 1
+                fut = self._futures.pop(q.qid, None)
+                if fut is not None:
+                    if isinstance(emb, Exception):
+                        fut.set_exception(emb)
+                    else:
+                        fut.set_result(emb)
+            queue.finish(len(batch))
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for e in self._wake.values():
+            e.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    @property
+    def max_concurrency(self) -> int:
+        return self.qm.max_concurrency
+
+
+def calibrate_depths(profile_npu: Callable[[int], float],
+                     profile_cpu: Optional[Callable[[int], float]],
+                     slo_s: float,
+                     probe_points: Sequence[int] = (1, 2, 4, 8, 16),
+                     ) -> Dict[str, int]:
+    """Paper §4.2.2 end-to-end: estimate both queue depths from a few
+    profiling points via the linear-regression estimator."""
+    d_npu, _ = estimator.estimate_depth(profile_npu, slo_s, probe_points)
+    d_cpu = 0
+    if profile_cpu is not None:
+        d_cpu, _ = estimator.estimate_depth(profile_cpu, slo_s, probe_points)
+    return {NPU: max(d_npu, 0), CPU: max(d_cpu, 0)}

@@ -1,0 +1,3 @@
+from repro.data import workload
+
+__all__ = ["workload"]

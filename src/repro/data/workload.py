@@ -1,0 +1,73 @@
+"""Synthetic data pipeline: training token streams and serving query loads.
+
+Training: an infinite deterministic stream of zipfian token batches with
+next-token labels (no external corpus in this offline container).
+Serving: query generators matching the paper's workload (§5.1.3 — default
+length 75 tokens, the typical RAG text-segmentation setting; Fig. 5 sweeps
+lengths; Fig. 2 diurnal rate curve lives in core.simulator.diurnal_trace).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TrainBatchSpec:
+    batch: int
+    seq_len: int
+    vocab_size: int
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Zipf-ish distribution over the vocab (natural-language-like ranks)."""
+    ranks = rng.zipf(1.3, size=shape)
+    return (np.minimum(ranks, vocab - 1)).astype(np.int32)
+
+
+class TokenStream:
+    """Deterministic, restartable training stream: batch dict per step."""
+
+    def __init__(self, spec: TrainBatchSpec, seed: int = 0,
+                 extra: Optional[Dict[str, tuple]] = None):
+        self.spec = spec
+        self.seed = seed
+        self.extra = extra or {}
+        self._step = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, self._step))
+        self._step += 1
+        s = self.spec
+        toks = _zipf_tokens(rng, (s.batch, s.seq_len + 1), s.vocab_size)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        for name, shape in self.extra.items():
+            out[name] = rng.standard_normal((s.batch, *shape)).astype(np.float32)
+        return out
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def restore(self, step: int) -> None:
+        self._step = step
+
+
+def query_lengths(n: int, mean: int = 75, jitter: float = 0.0,
+                  seed: int = 0) -> List[int]:
+    """Paper workload: fixed 75-token queries by default; optional jitter."""
+    if jitter <= 0:
+        return [mean] * n
+    rng = np.random.default_rng(seed)
+    return [max(1, int(x)) for x in rng.normal(mean, jitter * mean, size=n)]
+
+
+def make_queries(n: int, vocab: int, length: int = 75,
+                 seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [_zipf_tokens(rng, (length,), vocab) for _ in range(n)]

@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import (attention_ref, flash_attention,
+                                               flash_attention_pallas)
+
+__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref"]

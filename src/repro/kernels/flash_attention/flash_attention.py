@@ -1,0 +1,119 @@
+"""Flash attention Pallas TPU kernel: blockwise online softmax.
+
+TPU adaptation of the attention hot-spot (DESIGN.md §6):
+* grid = (B, H, num_q_blocks, num_kv_blocks); the kv dim is the innermost
+  (sequential) axis so the (block_q, hd) accumulator, running max and
+  denominator live in VMEM scratch across kv steps — score blocks NEVER
+  touch HBM (the pure-JAX path materialises them; see §Roofline notes).
+* BlockSpecs tile q/o as (1, 1, block_q, head_dim) and k/v as
+  (1, 1, block_k, head_dim) — MXU-aligned when block_* are multiples of 128
+  and head_dim is 64/128.
+* GQA is expressed in the k/v index_map (kv_head = head // group_size), so
+  grouped queries reuse the same k/v VMEM tile with no gather.
+* causal / sliding-window masks come from program-id iota — no mask tensor.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
+                  scale: float, causal: bool, window: int,
+                  sq: int, sk: int, block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q = q_ref[0, 0]                                      # (bq, hd)
+    k = k_ref[0, 0]                                      # (bk, hd)
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qp = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kp = ki * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    valid = (qp < sq) & (kp < sk)
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= kp > qp - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    d_ref[...] = d_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(d_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
+
+    On this container the kernel body executes via interpret=True (CPU);
+    on TPU pass interpret=False for the compiled MXU path."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, "num_heads must be a multiple of num_kv_heads"
+    G = H // KV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    pq, pk = nq * bq - Sq, nk * bk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, sq=Sq, sk=Sk, block_q=bq, block_k=bk, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

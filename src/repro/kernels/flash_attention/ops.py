@@ -1,0 +1,45 @@
+"""Backend-dispatching jit wrapper for flash attention.
+
+* TPU backend       -> compiled Pallas kernel
+* everything else   -> chunked pure-JAX flash (models.layers) — same math
+* tests             -> Pallas interpret mode vs ref.py oracle
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "auto", block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=False)
+    if backend == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    from repro.models.layers import flash_attention_jnp
+
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    out = flash_attention_jnp(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        jnp.arange(Sq, dtype=jnp.int32), jnp.arange(Sk, dtype=jnp.int32),
+        causal=causal, window=window)
+    return jnp.moveaxis(out, 2, 1)
+
+
+__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref"]

@@ -1,0 +1,4 @@
+from repro.kernels.flash_decode.ops import (decode_attention_ref,
+                                            flash_decode, flash_decode_pallas)
+
+__all__ = ["flash_decode", "flash_decode_pallas", "decode_attention_ref"]

@@ -1,0 +1,106 @@
+"""Flash-decode Pallas TPU kernel: one query token against a long KV cache.
+
+This is the kernel twin of the shard_map flash-decode serving path
+(models.layers.attn_decode_sharded): each shard's LOCAL cache slice is
+attended by this kernel; the cross-shard pmax/psum combine stays in
+shard_map.  Design:
+
+* grid = (B, KV, num_k_blocks) with the k-block axis innermost/sequential;
+  the (G, hd) accumulator + running max/denom live in VMEM scratch, so the
+  (G, block_k) score tile never touches HBM — decode becomes a pure
+  cache-streaming workload (the roofline minimum).
+* masking uses the kpos slot-position array (ring-buffer aware: slots carry
+  absolute positions, so sliding-window archs work unchanged).
+* block_k is a multiple of 128 for lane alignment; G x hd output tiles are
+  VREG-friendly for every assigned GQA group size (1..8).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(pos_ref, q_ref, k_ref, v_ref, kp_ref, o_ref,
+               acc_ref, m_ref, d_ref, *, scale: float, window: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q = q_ref[0, 0]                          # (G, hd)
+    k = k_ref[0, :, 0, :]                    # (bk, hd)
+    v = v_ref[0, :, 0, :]
+    kp = kp_ref[...]                         # (bk,)
+    pos = pos_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bk)
+    valid = (kp >= 0) & (kp <= pos)
+    if window:
+        valid &= kp > pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    d_ref[...] = d_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(d_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        kpos: jax.Array, pos, *, window: int = 0,
+                        block_k: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, S, KV, hd); kpos: (S,) -> (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    S = k.shape[1]
+    bk = min(block_k, S)
+    nk = -(-S // bk)
+    pad = nk * bk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_fd_kernel, scale=1.0 / math.sqrt(hd),
+                               window=window, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (0,)),                 # pos
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki: (b, ki, h, 0)),  # k
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki: (b, ki, h, 0)),  # v
+            pl.BlockSpec((bk,), lambda b, h, ki: (ki,)),               # kpos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v, kpos)

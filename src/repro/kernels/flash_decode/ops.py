@@ -1,0 +1,26 @@
+"""Backend-dispatching jit wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend", "block_k"))
+def flash_decode(q, k, v, kpos, pos, *, window: int = 0,
+                 backend: str = "auto", block_k: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return flash_decode_pallas(q, k, v, kpos, pos, window=window,
+                                   block_k=block_k, interpret=False)
+    if backend == "interpret":
+        return flash_decode_pallas(q, k, v, kpos, pos, window=window,
+                                   block_k=block_k, interpret=True)
+    return decode_attention_ref(q, k, v, kpos, pos, window=window)
+
+
+__all__ = ["flash_decode", "flash_decode_pallas", "decode_attention_ref"]

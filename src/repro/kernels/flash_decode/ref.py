@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token flash-decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kpos: jax.Array, pos, window: int = 0) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, S, KV, hd); kpos: (S,) absolute position
+    per cache slot (-1 = empty); pos: scalar current position.
+    Returns (B, KV, G, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_pallas, rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_pallas", "rmsnorm_ref"]

@@ -1,0 +1,26 @@
+"""Backend-dispatching jit wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "backend", "block_rows"))
+def rmsnorm(x, scale, eps: float = 1e-5, *, backend: str = "auto",
+            block_rows: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return rmsnorm_pallas(x, scale, eps, block_rows=block_rows,
+                              interpret=False)
+    if backend == "interpret":
+        return rmsnorm_pallas(x, scale, eps, block_rows=block_rows,
+                              interpret=True)
+    return rmsnorm_ref(x, scale, eps)
+
+
+__all__ = ["rmsnorm", "rmsnorm_pallas", "rmsnorm_ref"]

@@ -1,0 +1,46 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One pass over a (block_rows, D) VMEM tile: fp32 mean-square reduce + rsqrt
++ scale, written back in the input dtype.  Unfused XLA does this as three
+HBM round-trips on the residual stream; fused it is one read + one write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)           # (br, D)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, eps: float = 1e-5, *,
+                   block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (..., D); scale: (D,)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(block_rows, R)
+    nr = -(-R // br)
+    pad = nr * br - R
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * br, D), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:R].reshape(orig_shape)

@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import ssm_scan, ssm_scan_pallas, ssm_scan_ref
+
+__all__ = ["ssm_scan", "ssm_scan_pallas", "ssm_scan_ref"]

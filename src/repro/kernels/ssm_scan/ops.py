@@ -1,0 +1,26 @@
+"""Backend-dispatching jit wrapper for the selective scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk", "block_di"))
+def ssm_scan(x, dt, Bm, Cm, A, *, backend: str = "auto", chunk: int = 128,
+             block_di: int = 512):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return ssm_scan_pallas(x, dt, Bm, Cm, A, chunk=chunk,
+                               block_di=block_di, interpret=False)
+    if backend == "interpret":
+        return ssm_scan_pallas(x, dt, Bm, Cm, A, chunk=chunk,
+                               block_di=block_di, interpret=True)
+    return ssm_scan_ref(x, dt, Bm, Cm, A)
+
+
+__all__ = ["ssm_scan", "ssm_scan_pallas", "ssm_scan_ref"]

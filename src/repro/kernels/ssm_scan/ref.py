@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the mamba-1 selective scan (sequential, fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                 A: jax.Array, h0: jax.Array | None = None):
+    """x, dt: (B, S, DI); Bm, Cm: (B, S, N); A: (DI, N).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+    y_t = <h_t, C_t>
+
+    Returns (y: (B, S, DI) fp32, h_final: (B, DI, N) fp32)."""
+    B, S, DI = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((B, DI, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        h = h * jnp.exp(dt_t[..., None] * Af) \
+            + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (dtf, xf, Bf, Cf))
+    h, ys = lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

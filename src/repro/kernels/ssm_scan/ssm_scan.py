@@ -1,0 +1,95 @@
+"""Mamba-1 selective-scan Pallas TPU kernel, chunked over sequence.
+
+TPU adaptation (DESIGN.md §6): the scan is sequential in time but fully
+parallel over (batch, d_inner) — so:
+
+* grid = (B, DI / block_di, S / chunk) with the chunk axis innermost
+  (sequential); the (block_di, N) hidden state lives in VMEM scratch and is
+  carried across chunk steps without ever visiting HBM.
+* each grid step streams a (chunk, block_di) tile of x/dt and a (chunk, N)
+  tile of B/C into VMEM and runs the recurrence with a fori_loop in
+  registers/VMEM; y is written back tile-by-tile.
+* the elementwise recurrence runs on the VPU; N=16 keeps the per-step state
+  update (block_di x 16) VREG-friendly.
+
+This removes the per-timestep HBM round-trip of the lax.scan reference —
+the roofline memory term for mamba prefill is dominated by exactly that
+traffic (see EXPERIMENTS.md §Roofline for falcon-mamba-7b x prefill_32k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, x_ref, b_ref, c_ref, A_ref, y_ref, hout_ref, h_ref,
+                *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dt = dt_ref[0].astype(jnp.float32)      # (chunk, dib)
+    x = x_ref[0].astype(jnp.float32)        # (chunk, dib)
+    Bm = b_ref[0].astype(jnp.float32)       # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (chunk, N)
+    A = A_ref[...].astype(jnp.float32)      # (dib, N)
+
+    def step(t, h):
+        dA = jnp.exp(dt[t][:, None] * A)                    # (dib, N)
+        h = h * dA + (dt[t] * x[t])[:, None] * Bm[t][None, :]
+        y_ref[0, t] = (h * Cm[t][None, :]).sum(-1).astype(y_ref.dtype)
+        return h
+
+    h = lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        hout_ref[0] = h_ref[...]
+
+
+def ssm_scan_pallas(x: jax.Array, dt: jax.Array, Bm: jax.Array,
+                    Cm: jax.Array, A: jax.Array, *,
+                    chunk: int = 128, block_di: int = 512,
+                    interpret: bool = True):
+    """x, dt: (B, S, DI); Bm, Cm: (B, S, N); A: (DI, N).
+    Returns (y (B, S, DI) fp32, h_final (B, DI, N) fp32)."""
+    B, S, DI = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    block_di = min(block_di, DI)
+    assert S % chunk == 0, "S must be a multiple of chunk"
+    assert DI % block_di == 0, "DI must be a multiple of block_di"
+    nc = S // chunk
+    ndi = DI // block_di
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, nc=nc)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, ndi, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),  # x
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),         # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),         # C
+            pl.BlockSpec((block_di, N), lambda b, d, c: (d, 0)),            # A
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),  # y
+            pl.BlockSpec((1, block_di, N), lambda b, d, c: (b, d, 0)),      # h
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, DI), jnp.float32),
+            jax.ShapeDtypeStruct((B, DI, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, Bm, Cm, A)
+    return y, h

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked at 512) ---
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_shape,
+                           shape_supported)
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.roofline import analysis
+from repro.steps import optim
+from repro.steps.inputs import cache_specs, input_specs
+from repro.steps.serve import (build_decode_step, build_prefill_step,
+                               serve_shardings)
+from repro.steps.train import build_train_step, train_shardings
+
+
+def _mem_dict(mem) -> Dict[str, Any]:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    return {k: getattr(mem, k, None) for k in keys}
+
+
+def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True, opt: str = "") -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) combo; return the record."""
+    from repro.perf_flags import parse_opt, reset_flags, set_flags
+
+    reset_flags()
+    if opt:
+        set_flags(**parse_opt(opt))
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if opt:
+        rec["opt"] = opt
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    ctx = jax.set_mesh(mesh)  # bare-PartitionSpec constraints need a context
+    ctx.__enter__()
+
+    if shape.kind == "train":
+        params_shape = jax.eval_shape(
+            lambda: api.init_params(key, cfg, jnp.float32))
+        opt_shape = jax.eval_shape(optim.init, params_shape)
+        step = build_train_step(cfg, shape, mesh)
+        (psh, osh, bsh), out_sh = train_shardings(cfg, shape, mesh, params_shape)
+        batch = input_specs(cfg, shape)
+        fn = jax.jit(step, in_shardings=(psh, osh, bsh), out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        params_shape = jax.eval_shape(
+            lambda: api.init_params(key, cfg, jnp.bfloat16))
+        step = build_prefill_step(cfg, shape, mesh)
+        psh, bsh = serve_shardings(cfg, shape, mesh, params_shape)
+        batch = input_specs(cfg, shape)
+        fn = jax.jit(step, in_shardings=(psh, bsh))
+        lowered = fn.lower(params_shape, batch)
+    else:  # decode
+        from repro.perf_flags import FLAGS
+        params_shape = jax.eval_shape(
+            lambda: api.init_params(key, cfg, jnp.bfloat16))
+        cache_shape = cache_specs(
+            cfg, shape,
+            cache_dtype=jnp.float32 if FLAGS.cache_f32 else jnp.bfloat16)
+        step = build_decode_step(cfg, shape, mesh)
+        psh, csh, bsh = serve_shardings(cfg, shape, mesh, params_shape,
+                                        cache_shape)
+        batch = input_specs(cfg, shape)
+        fn = jax.jit(step, in_shardings=(psh, csh, bsh), donate_argnums=(1,))
+        lowered = fn.lower(params_shape, cache_shape, batch)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    try:
+        compiled = lowered.compile()
+    finally:
+        ctx.__exit__(None, None, None)
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        rec["memory"] = _mem_dict(compiled.memory_analysis())
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory"] = {"error": str(e)}
+
+    mf = analysis.model_flops(cfg, shape, params_shape)
+    roof = analysis.analyse(compiled, mesh.size, mf)
+    rec["roofline"] = roof.as_dict()
+    counts = analysis.count_params(
+        params_shape,
+        (cfg.experts_per_token / cfg.num_experts) if cfg.is_moe else None)
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = counts["active"]
+    if verbose:
+        print(f"  lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"dominant={roof.dominant} "
+              f"t_comp={roof.compute_s*1e3:.2f}ms t_mem={roof.memory_s*1e3:.2f}ms "
+              f"t_coll={roof.collective_s*1e3:.2f}ms useful={roof.useful_ratio:.2f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run (lower+compile)")
+    ap.add_argument("--arch", default=None, help="arch id (default: all assigned)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all four)")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--opt", default="",
+                    help="perf flags, e.g. 'mamba_chunk=16,attn_band_skip=1'")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch} x {shape} x {'2x16x16' if args.multi_pod else '16x16'}"
+            print(f"[dryrun] {tag}", flush=True)
+            try:
+                rec = dry_run(arch, shape, multi_pod=args.multi_pod,
+                              opt=args.opt)
+            except Exception:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "error": traceback.format_exc(limit=20)}
+                print(rec["error"], flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  The dry-run entrypoint (launch/dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax
+so these meshes can be built on the CPU-only container.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e); multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests / the real serving engine."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

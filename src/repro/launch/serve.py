@@ -1,0 +1,94 @@
+"""Serving driver: the full WindVE pipeline on this host.
+
+Device detector -> estimator calibration (profiling the REAL local JAX
+embedder for the CPU pool and the paper-calibrated model for the NPU pool)
+-> queue manager -> threaded engine -> workload replay -> stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --queries 64 --slo 1.0
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.device_detector import DeviceInventory, detect
+from repro.core.estimator import estimate_depth
+from repro.core.queue_manager import CPU, NPU
+from repro.core.simulator import PAPER_DEVICES, profile_fn_for
+from repro.core.windve import JaxEmbedderBackend, ModeledBackend, WindVE
+from repro.data.workload import make_queries
+from repro.models import embedder
+
+
+def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
+                 smoke: bool = True, heter: bool = True,
+                 npu_model: str = "tesla-v100/bge", seed: int = 0):
+    cfg = get_config(model)
+    if smoke:
+        cfg = cfg.smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(seed), cfg)
+
+    det = detect(DeviceInventory(npus=1, cpus=1), heter_requested=heter)
+    print(f"[serve] detector: main={det.device_main} aux={det.device_auxiliary} "
+          f"heter={det.heter_enable}")
+
+    npu_dev = PAPER_DEVICES[npu_model]
+    npu_be = ModeledBackend(npu_dev, embed_dim=cfg.d_model)
+    cpu_be = JaxEmbedderBackend(cfg, params, max_tokens=96)
+
+    # --- §4.2.2: calibrate queue depths with the linear-regression estimator
+    d_npu, fit_n = estimate_depth(profile_fn_for(npu_dev), slo)
+
+    def profile_cpu(c: int) -> float:
+        qs = make_queries(c, cfg.vocab_size, length=75, seed=seed)
+        from repro.core.queue_manager import Query
+        batch = [Query(qid=i, payload=q, length=75) for i, q in enumerate(qs)]
+        t0 = time.monotonic()
+        cpu_be.embed_batch(batch)
+        return time.monotonic() - t0
+
+    d_cpu, fit_c = (estimate_depth(profile_cpu, slo, probe_points=(1, 2, 4, 8))
+                    if det.heter_enable else (0, None))
+    d_npu, d_cpu = max(d_npu, 1), max(d_cpu, 0)
+    print(f"[serve] depths: C_NPU={d_npu} (a={fit_n.alpha:.4f} b={fit_n.beta:.3f}) "
+          f"C_CPU={d_cpu}" + (f" (a={fit_c.alpha:.4f} b={fit_c.beta:.3f})"
+                              if fit_c else ""))
+    engine = WindVE(npu_be, cpu_be if det.heter_enable else None,
+                    d_npu, d_cpu, heter_enable=det.heter_enable)
+    return engine, cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="bge-large-zh-v1.5")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--slo", type=float, default=1.0)
+    ap.add_argument("--length", type=int, default=75)
+    ap.add_argument("--no-heter", action="store_true",
+                    help="disable CPU offloading (the paper's baseline)")
+    args = ap.parse_args()
+
+    engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter)
+    queries = make_queries(args.queries, cfg.vocab_size, args.length)
+    t0 = time.monotonic()
+    futs = [engine.submit(payload=q, length=args.length) for q in queries]
+    done = [f.result(timeout=60) for f in futs if f is not None]
+    wall = time.monotonic() - t0
+    s = engine.stats
+    print(f"[serve] {args.queries} queries in {wall:.2f}s: "
+          f"accepted={s.accepted} rejected(BUSY)={s.rejected} "
+          f"completed={len(done)}")
+    print(f"[serve] per-device: {s.per_device}  "
+          f"p50={s.p(50):.3f}s p99={s.p(99):.3f}s  "
+          f"SLO({args.slo}s) violations="
+          f"{sum(1 for l in s.latencies if l > args.slo)}")
+    print(f"[serve] max concurrency C = {engine.max_concurrency}")
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Training driver: real steps on the host mesh (reduced configs) or a
+production-mesh launch on TPU.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --smoke --steps 20 --batch 8 --seq 128 --ckpt /tmp/ck.npz
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.workload import TokenStream, TrainBatchSpec
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import api
+from repro.steps import checkpoint, optim
+from repro.steps.train import build_train_step, train_shardings
+
+
+def train(arch: str, steps: int, batch: int, seq: int, smoke: bool = True,
+          ckpt: str | None = None, resume: str | None = None,
+          lr: float = 3e-4, log_every: int = 10, seed: int = 0,
+          production_mesh: bool = False):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    shape = ShapeConfig("cli", seq_len=seq, global_batch=batch, kind="train")
+    mesh = make_production_mesh() if production_mesh else make_host_mesh()
+
+    key = jax.random.PRNGKey(seed)
+    params = api.init_params(key, cfg)
+    opt_state = optim.init(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch={batch} seq={seq} steps={steps}")
+
+    extra = {}
+    if cfg.frontend == "vision":
+        extra["patches"] = (cfg.num_patches, cfg.d_model)
+    if cfg.frontend == "audio":
+        extra["frames"] = (cfg.num_frames, cfg.d_model)
+    text = seq - cfg.num_patches if cfg.frontend == "vision" else seq
+    stream = TokenStream(TrainBatchSpec(batch, text, cfg.vocab_size),
+                         seed=seed, extra=extra)
+
+    start = 0
+    if resume:
+        (params, opt_state), meta = checkpoint.load(resume, (params, opt_state))
+        start = int(meta.get("step", 0))
+        stream.restore(start)
+        print(f"[train] resumed from {resume} at step {start}")
+
+    step_fn = jax.jit(build_train_step(
+        cfg, shape, mesh, optim.AdamWConfig(lr=lr)), donate_argnums=(0, 1))
+
+    losses = []
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        for i in range(start, start + steps):
+            batch_np = next(stream)
+            params, opt_state, metrics = step_fn(params, opt_state, batch_np)
+            losses.append(float(metrics["loss"]))
+            if (i + 1) % log_every == 0 or i == start:
+                dt = (time.time() - t0) / max(1, len(losses))
+                print(f"  step {i+1}: loss={losses[-1]:.4f} "
+                      f"ce={float(metrics['ce']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"({dt*1e3:.0f} ms/step)")
+    if ckpt:
+        checkpoint.save(ckpt, (params, opt_state),
+                        {"step": start + steps, "arch": cfg.name})
+        print(f"[train] checkpoint -> {ckpt}")
+    return params, opt_state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not smoke) config")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    train(args.arch, args.steps, args.batch, args.seq, smoke=not args.full,
+          ckpt=args.ckpt, resume=args.resume, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

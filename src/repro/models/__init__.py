@@ -1,0 +1,3 @@
+from repro.models import embedder, encdec, layers, lm
+
+__all__ = ["layers", "lm", "encdec", "embedder"]

@@ -1,0 +1,21 @@
+"""Model-family dispatch: one entry point per step kind regardless of arch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import embedder, encdec, lm
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.arch_type == "encoder":
+        return embedder.init_embedder(key, cfg, dtype)
+    if cfg.cross_attention:
+        return encdec.init_encdec(key, cfg, dtype)
+    return lm.init_lm(key, cfg, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    if cfg.cross_attention:
+        return encdec.init_cache(cfg, batch, seq_len, dtype)
+    return lm.init_cache(cfg, batch, seq_len, dtype)

@@ -1,0 +1,70 @@
+"""Bidirectional text embedder — the paper's own model family.
+
+bge-large-zh-v1.5 (326M, CLS pooling, 1024-d output) and jina-v2 (mean
+pooling) style: BERT-like encoder stack + pooling + L2 normalisation.  This
+is the model WindVE serves; its forward pass is what the queue manager's
+CPU/NPU instances execute per batch of queries.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def init_embedder(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+
+    def blk(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "norm2": L.init_norm(cfg, dtype),
+            "ffn": L.init_mlp(k2, cfg, dtype),
+        }
+
+    return {
+        "embed": L._dense_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "blocks": jax.vmap(blk)(layer_keys),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
+          mask: jax.Array | None = None) -> jax.Array:
+    """tokens: (B, S) int32; mask: (B, S) 1=real token.  Returns (B, embed_dim)
+    L2-normalised embeddings (the paper's 1024-d fp32 output vector)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+
+    def body(h, bp):
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        h = h + L.attn_forward(bp["attn"], cfg, hin, positions, causal=False)
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        h = h + L.apply_mlp(bp["ffn"], cfg, hin)
+        return h, None
+
+    h, _ = lax.scan(body, h, params["blocks"])
+    h = L.apply_norm(params["final_norm"], cfg, h)
+
+    if mask is None:
+        mask = jnp.ones((B, S), h.dtype)
+    mask = mask.astype(h.dtype)
+    if cfg.pool == "mean":
+        pooled = (h * mask[..., None]).sum(1) / jnp.maximum(
+            mask.sum(1, keepdims=True), 1.0)
+    else:  # cls
+        pooled = h[:, 0]
+    pooled = pooled.astype(jnp.float32)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)

@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per spec, the modality frontend (mel spectrogram + conv downsampler) is a
+STUB: ``input_specs`` provides precomputed frame embeddings (B, F, d_model).
+This module implements the transformer encoder over those frames and the
+decoder (causal self-attention + cross-attention) that consumes them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.lm import ConstraintFn, _id, cache_len
+
+Params = Dict[str, Any]
+
+
+def init_enc_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "norm2": L.init_norm(cfg, dtype),
+        "ffn": L.init_mlp(ks[1], cfg, dtype),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "norm_x": L.init_norm(cfg, dtype),
+        "xattn": L.init_attention(ks[1], cfg, dtype, cross=True),
+        "norm2": L.init_norm(cfg, dtype),
+        "ffn": L.init_mlp(ks[2], cfg, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": L._dense_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg, dtype))(enc_keys),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg, dtype))(dec_keys),
+        "dec_norm": L.init_norm(cfg, dtype),
+        "lm_head": L._dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           constrain: ConstraintFn = _id) -> jax.Array:
+    """frames: (B, F, D) stub frame embeddings -> encoder states (B, F, D)."""
+    F = frames.shape[1]
+    positions = jnp.arange(F, dtype=jnp.int32)
+    frames = frames.astype(L.COMPUTE_DTYPE)
+    h = frames + L.sinusoidal_positions(positions, cfg.d_model).astype(frames.dtype)
+
+    def body(h, bp):
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        h = h + L.attn_forward(bp["attn"], cfg, hin, positions, causal=False)
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        h = constrain(h + L.apply_mlp(bp["ffn"], cfg, hin))
+        return h, None
+
+    h, _ = lax.scan(body, h, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], cfg, h)
+
+
+def _dec_embed(params: Params, cfg: ModelConfig, tokens: jax.Array, pos0=0):
+    h = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    S = h.shape[1]
+    positions = jnp.arange(pos0, pos0 + S, dtype=jnp.int32)
+    h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    return h, positions
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, remat: bool = False,
+            return_hidden: bool = False,
+            constrain: ConstraintFn = _id) -> Tuple[jax.Array, jax.Array]:
+    """Training forward.  Returns (logits (B,S,V), aux=0)."""
+    enc = encode(params, cfg, frames, constrain)
+    h, positions = _dec_embed(params, cfg, tokens)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+
+    def body(h, bp):
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        h = h + L.attn_forward(bp["attn"], cfg, hin, positions)
+        hin = L.apply_norm(bp["norm_x"], cfg, h)
+        h = h + L.attn_forward(bp["xattn"], cfg, hin, positions, causal=False,
+                               kv_x=enc, kv_positions=enc_pos)
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        h = constrain(h + L.apply_mlp(bp["ffn"], cfg, hin))
+        return h, None
+
+    from repro.models.lm import _remat
+    body_fn = _remat(body) if remat else body
+    h, _ = lax.scan(body_fn, h, params["dec_blocks"])
+    h = L.apply_norm(params["dec_norm"], cfg, h)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return h @ params["lm_head"].astype(h.dtype), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    Lc, hd = cfg.num_layers, cfg.resolved_head_dim
+    Sc = cache_len(cfg, seq_len)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((Lc, batch, Sc, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((Lc, batch, Sc, cfg.num_kv_heads, hd), dtype),
+        "kpos": jnp.full((Sc,), -1, jnp.int32),
+        "cross_k": jnp.zeros((Lc, batch, cfg.num_frames, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((Lc, batch, cfg.num_frames, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, cache_dtype=jnp.bfloat16,
+            max_len: Optional[int] = None,
+            constrain: ConstraintFn = _id) -> Tuple[jax.Array, Params]:
+    """Encode frames + run the decoder prompt; build the decode cache."""
+    enc = encode(params, cfg, frames, constrain)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    h, positions = _dec_embed(params, cfg, tokens)
+    S = h.shape[1]
+    Sc = cache_len(cfg, max(S, max_len or S))
+
+    def body(h, bp):
+        out: Params = {}
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        a, k, v = L.attn_forward(bp["attn"], cfg, hin, positions, return_kv=True)
+        out["k"], out["v"] = k.astype(cache_dtype), v.astype(cache_dtype)
+        h = h + a
+        hin = L.apply_norm(bp["norm_x"], cfg, h)
+        # cross K/V are position-independent; compute once and cache
+        xk = (enc @ bp["xattn"]["wk"].astype(enc.dtype)).reshape(
+            enc.shape[0], enc.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        xv = (enc @ bp["xattn"]["wv"].astype(enc.dtype)).reshape(
+            enc.shape[0], enc.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        out["cross_k"], out["cross_v"] = xk.astype(cache_dtype), xv.astype(cache_dtype)
+        h = h + L.attn_forward(bp["xattn"], cfg, hin, positions, causal=False,
+                               kv_x=enc, kv_positions=enc_pos)
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        h = constrain(h + L.apply_mlp(bp["ffn"], cfg, hin))
+        return h, out
+
+    h, layer_cache = lax.scan(body, h, params["dec_blocks"])
+    cache = dict(layer_cache)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    kp = jnp.arange(S, dtype=jnp.int32)
+    if Sc > S:
+        pad = Sc - S
+        cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.concatenate([kp, jnp.full((pad,), -1, jnp.int32)])
+    cache["kpos"] = kp
+    h = L.apply_norm(params["dec_norm"], cfg, h[:, -1:])
+    return (h @ params["lm_head"].astype(h.dtype))[:, 0], cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Params,
+                constrain: ConstraintFn = _id) -> Tuple[jax.Array, Params]:
+    pos = cache["pos"]
+    h = params["embed"][token[:, None]].astype(L.COMPUTE_DTYPE)
+    h = h + L.sinusoidal_positions(pos[None], cfg.d_model).astype(h.dtype)
+
+    Sc = cache["k"].shape[2]
+    slot = L.cache_slot(cfg, pos, Sc)
+    new_kpos = lax.dynamic_update_slice_in_dim(
+        cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+
+    xs = {"bp": params["dec_blocks"], "k": cache["k"], "v": cache["v"],
+          "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+    def body(h, x):
+        bp = x["bp"]
+        out: Params = {}
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        a, nk, nv = L.attn_decode(bp["attn"], cfg, hin, pos,
+                                  x["k"], x["v"], new_kpos)[:3]
+        out["k"], out["v"] = nk, nv
+        h = h + a
+        hin = L.apply_norm(bp["norm_x"], cfg, h)
+        h = h + L.cross_decode(bp["xattn"], cfg, hin,
+                               x["cross_k"], x["cross_v"], cfg.num_frames)
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        h = constrain(h + L.apply_mlp(bp["ffn"], cfg, hin))
+        return h, out
+
+    h, new_layers = lax.scan(body, h, xs)
+    new_cache = dict(cache)
+    new_cache.update({k: v for k, v in new_layers.items()})
+    new_cache["pos"] = pos + 1
+    new_cache["kpos"] = new_kpos
+    h = L.apply_norm(params["dec_norm"], cfg, h)
+    return (h @ params["lm_head"].astype(h.dtype))[:, 0], new_cache

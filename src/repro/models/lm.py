@@ -1,0 +1,396 @@
+"""Unified decoder language model: dense / MoE / SSM (mamba) / hybrid.
+
+One block definition parameterised by ``ModelConfig.block``; the layer stack
+is a ``jax.lax.scan`` over stacked per-layer params so HLO size is O(1) in
+depth.  Exposes three entry points:
+
+* ``forward``       — full-sequence logits (training).
+* ``prefill``       — full-sequence logits + decode cache.
+* ``decode_step``   — one token against the cache.
+
+VLM archs reuse these with ``extra_embed`` (stub patch embeddings) prepended.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+ConstraintFn = Callable[[jax.Array], jax.Array]
+_id = lambda x: x
+
+
+def _remat(fn):
+    """Layer remat with the policy from perf_flags (baseline: full remat)."""
+    from repro.perf_flags import FLAGS
+
+    if FLAGS.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, dtype)}
+    if cfg.block in ("attn", "hybrid"):
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    if cfg.block in ("mamba", "hybrid"):
+        p["mamba"] = L.init_mamba(ks[1], cfg, dtype)
+    if cfg.d_ff:
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["ffn"] = (L.init_moe(ks[2], cfg, dtype) if cfg.is_moe
+                    else L.init_mlp(ks[2], cfg, dtype))
+    return p
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    p = {
+        "embed": L._dense_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ----------------------------------------------------------------------------
+
+def _block_forward(bp: Params, cfg: ModelConfig, h: jax.Array,
+                   positions: jax.Array, constrain: ConstraintFn) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    hin = L.apply_norm(bp["norm1"], cfg, h)
+    if cfg.block == "attn":
+        h = h + L.attn_forward(bp["attn"], cfg, hin, positions)
+    elif cfg.block == "mamba":
+        h = h + L.mamba_forward(bp["mamba"], cfg, hin)
+    else:  # hybrid: parallel attention + mamba heads, averaged (Hymba)
+        a = L.attn_forward(bp["attn"], cfg, hin, positions)
+        m = L.mamba_forward(bp["mamba"], cfg, hin)
+        h = h + 0.5 * (a + m)
+    h = constrain(h)
+    if cfg.d_ff:
+        hin = L.apply_norm(bp["norm2"], cfg, h)
+        if cfg.is_moe:
+            y, aux = L.apply_moe(bp["ffn"], cfg, hin)
+        else:
+            y = L.apply_mlp(bp["ffn"], cfg, hin)
+        h = constrain(h + y)
+    return h, aux
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
+           extra_embed: Optional[jax.Array], pos_offset: int = 0):
+    h = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    if extra_embed is not None:          # VLM: prepend stub patch embeddings
+        h = jnp.concatenate([extra_embed.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(pos_offset, pos_offset + S, dtype=jnp.int32)
+    if not cfg.rope_theta:               # learned/absolute-position families
+        h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    return h, positions
+
+
+def _unembed(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = L.apply_norm(params["final_norm"], cfg, h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head.astype(h.dtype)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embed: Optional[jax.Array] = None,
+            remat: bool = False,
+            return_hidden: bool = False,
+            constrain: ConstraintFn = _id) -> Tuple[jax.Array, jax.Array]:
+    """Training forward.  tokens: (B, S_text) -> (logits (B,S,V), moe_aux).
+
+    ``return_hidden=True`` skips the unembed and returns the final-normed
+    hidden states instead (the chunked CE loss computes logits per-chunk to
+    avoid materialising (B, S, V))."""
+    h, positions = _embed(params, cfg, tokens, extra_embed)
+
+    def body(carry, bp):
+        hh, _ = carry
+        hh, aux = _block_forward(bp, cfg, hh, positions, constrain)
+        return (hh, aux), aux
+
+    body_fn = _remat(body) if remat else body
+    (h, _), auxs = lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                            params["blocks"])
+    if return_hidden:
+        return L.apply_norm(params["final_norm"], cfg, h), auxs.sum()
+    return _unembed(params, cfg, h), auxs.sum()
+
+
+def head_weights(params: Params, cfg: ModelConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ----------------------------------------------------------------------------
+# decode cache
+# ----------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Empty decode cache sized for a context of ``seq_len`` tokens."""
+    Lc, hd = cfg.num_layers, cfg.resolved_head_dim
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        Sc = cache_len(cfg, seq_len)
+        cache["k"] = jnp.zeros((Lc, batch, Sc, cfg.num_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((Lc, batch, Sc, cfg.num_kv_heads, hd), dtype)
+        cache["kpos"] = jnp.full((Sc,), -1, jnp.int32)
+    if cfg.has_ssm:
+        cache["ssm"] = jnp.zeros((Lc, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embed: Optional[jax.Array] = None,
+            cache_dtype=jnp.bfloat16,
+            max_len: Optional[int] = None,
+            constrain: ConstraintFn = _id) -> Tuple[jax.Array, Params]:
+    """Process the full prompt; return (last-position logits (B,V), cache).
+
+    ``max_len`` sizes the cache for subsequent decode (>= prompt length for
+    full-attention archs; windowed archs clamp to the window)."""
+    h, positions = _embed(params, cfg, tokens, extra_embed)
+    B, S = h.shape[0], h.shape[1]
+    Sc = cache_len(cfg, max(S, max_len or S))
+    keep = min(S, Sc)
+
+    def body(h, bp):
+        out: Params = {}
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        if cfg.has_attention:
+            a, k, v = L.attn_forward(bp["attn"], cfg, hin, positions, return_kv=True)
+            out["k"] = k[:, -keep:].astype(cache_dtype)
+            out["v"] = v[:, -keep:].astype(cache_dtype)
+        if cfg.has_ssm:
+            m, ssm_h, conv_state = L.mamba_prefill(bp["mamba"], cfg, hin)
+            out["ssm"] = ssm_h
+            out["conv"] = conv_state.astype(cache_dtype)
+        if cfg.block == "attn":
+            h = h + a
+        elif cfg.block == "mamba":
+            h = h + m
+        else:
+            h = h + 0.5 * (a + m)
+        h = constrain(h)
+        if cfg.d_ff:
+            hin = L.apply_norm(bp["norm2"], cfg, h)
+            y = (L.apply_moe(bp["ffn"], cfg, hin)[0] if cfg.is_moe
+                 else L.apply_mlp(bp["ffn"], cfg, hin))
+            h = constrain(h + y)
+        return h, out
+
+    h, layer_cache = lax.scan(body, h, params["blocks"])
+    cache = dict(layer_cache)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    if cfg.has_attention:
+        # slot layout: slot i holds absolute position (S - keep + i), then
+        # (windowed archs) rotated so decode's ring write (pos % Sc) lines up.
+        kp = jnp.arange(S - keep, S, dtype=jnp.int32)
+        if Sc > keep:  # room left for decode: pad empty slots at the end
+            pad = Sc - keep
+            cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kp = jnp.concatenate([kp, jnp.full((pad,), -1, jnp.int32)])
+        elif cfg.sliding_window:
+            roll = S % Sc
+            cache["k"] = jnp.roll(cache["k"], roll, axis=2)
+            cache["v"] = jnp.roll(cache["v"], roll, axis=2)
+            kp = jnp.roll(kp, roll)
+        cache["kpos"] = kp
+    logits = _unembed(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Params,
+                constrain: ConstraintFn = _id,
+                shard_ctx=None) -> Tuple[jax.Array, Params]:
+    """One decode step.  token: (B,) int32.  Returns (logits (B,V), cache).
+
+    ``shard_ctx=(mesh, dp, seq_axes)`` activates the shard_map flash-decode
+    attention path (perf flag decode_shard_map)."""
+    pos = cache["pos"]
+    h, _ = _embed(params, cfg, token[:, None], None, pos_offset=0)
+    if not cfg.rope_theta:
+        # _embed added position 0; replace with the true position encoding
+        h = params["embed"][token[:, None]].astype(L.COMPUTE_DTYPE)
+        h = h + L.sinusoidal_positions(pos[None], cfg.d_model).astype(h.dtype)
+
+    new_kpos = None
+    if cfg.has_attention:
+        Sc = cache["k"].shape[2]
+        slot = L.cache_slot(cfg, pos, Sc)
+        new_kpos = lax.dynamic_update_slice_in_dim(
+            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+
+    def layer(bp, h, state):
+        """One decoder layer at decode time.  state: per-layer cache slices."""
+        out: Params = {}
+        hin = L.apply_norm(bp["norm1"], cfg, h)
+        if cfg.has_attention:
+            a, nk, nv, = L.attn_decode(bp["attn"], cfg, hin, pos,
+                                       state["k"], state["v"], new_kpos)[:3]
+            out["k"], out["v"] = nk, nv
+        if cfg.has_ssm:
+            m, nh, nconv = L.mamba_decode(bp["mamba"], cfg, hin,
+                                          state["ssm"],
+                                          state["conv"].astype(hin.dtype))
+            out["ssm"], out["conv"] = nh, nconv.astype(state["conv"].dtype)
+        if cfg.block == "attn":
+            h = h + a
+        elif cfg.block == "mamba":
+            h = h + m
+        else:
+            h = h + 0.5 * (a + m)
+        if cfg.d_ff:
+            hin = L.apply_norm(bp["norm2"], cfg, h)
+            y = (L.apply_moe(bp["ffn"], cfg, hin)[0] if cfg.is_moe
+                 else L.apply_mlp(bp["ffn"], cfg, hin))
+            h = h + y
+        h = constrain(h)
+        return h, out
+
+    from repro.perf_flags import FLAGS
+
+    cache_keys = [k for k in ("k", "v", "ssm", "conv") if k in cache]
+    if FLAGS.decode_shard_map and shard_ctx is not None and cfg.has_attention:
+        # §Perf: flash-decode — seq-sharded cache attended via shard_map with
+        # partial-softmax psum combine; owner shard writes the new token.
+        mesh, dp, seq_axes = shard_ctx
+
+        def body(i, carry):
+            h, st = carry
+            bp = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                params["blocks"])
+            st = dict(st)
+            hin = L.apply_norm(bp["norm1"], cfg, h)
+            a = m = None
+            ks = lax.dynamic_index_in_dim(st["k"], i, 0, keepdims=False)
+            vs = lax.dynamic_index_in_dim(st["v"], i, 0, keepdims=False)
+            a, nk, nv = L.attn_decode_sharded(bp["attn"], cfg, hin, pos,
+                                              ks, vs, new_kpos,
+                                              mesh, dp, seq_axes)
+            st["k"] = lax.dynamic_update_index_in_dim(st["k"], nk, i, 0)
+            st["v"] = lax.dynamic_update_index_in_dim(st["v"], nv, i, 0)
+            if cfg.has_ssm:
+                ssm = lax.dynamic_index_in_dim(st["ssm"], i, 0, keepdims=False)
+                conv = lax.dynamic_index_in_dim(st["conv"], i, 0, keepdims=False)
+                m, nh, nconv = L.mamba_decode(bp["mamba"], cfg, hin, ssm,
+                                              conv.astype(hin.dtype))
+                st["ssm"] = lax.dynamic_update_index_in_dim(
+                    st["ssm"], nh.astype(st["ssm"].dtype), i, 0)
+                st["conv"] = lax.dynamic_update_index_in_dim(
+                    st["conv"], nconv.astype(st["conv"].dtype), i, 0)
+            h = h + (a if cfg.block == "attn" else 0.5 * (a + m))
+            if cfg.d_ff:
+                hin = L.apply_norm(bp["norm2"], cfg, h)
+                y = (L.apply_moe(bp["ffn"], cfg, hin)[0] if cfg.is_moe
+                     else L.apply_mlp(bp["ffn"], cfg, hin))
+                h = h + y
+            h = constrain(h)
+            return h, st
+
+        h, new_layers = lax.fori_loop(
+            0, cfg.num_layers, body, (h, {k: cache[k] for k in cache_keys}))
+    elif FLAGS.decode_fori:
+        # §Perf: fori_loop carrying the stacked cache; the ONLY write into
+        # the big k/v buffers is the current token's (B, 1, KV, hd) slice at
+        # (layer, :, slot) — the scan-ys path below makes XLA rewrite the
+        # FULL stacked cache (with a bf16->f32 roundtrip) per layer.
+        zero = jnp.zeros((), jnp.int32)
+
+        def body(i, carry):
+            h, st = carry
+            bp = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                params["blocks"])
+            st = dict(st)
+            hin = L.apply_norm(bp["norm1"], cfg, h)
+            a = m = None
+            if cfg.has_attention:
+                slot = L.cache_slot(cfg, pos, st["k"].shape[2])
+                nk, nv = L.attn_decode_kv(bp["attn"], cfg, hin, pos)
+                # write ONLY the new token: update shape (1, B, 1, KV, hd)
+                st["k"] = lax.dynamic_update_slice(
+                    st["k"], nk[None].astype(st["k"].dtype),
+                    (i, zero, slot, zero, zero))
+                st["v"] = lax.dynamic_update_slice(
+                    st["v"], nv[None].astype(st["v"].dtype),
+                    (i, zero, slot, zero, zero))
+                ks = lax.dynamic_index_in_dim(st["k"], i, 0, keepdims=False)
+                vs = lax.dynamic_index_in_dim(st["v"], i, 0, keepdims=False)
+                a = L.attn_decode_read(bp["attn"], cfg, hin, pos, ks, vs,
+                                       new_kpos)
+            if cfg.has_ssm:
+                ssm = lax.dynamic_index_in_dim(st["ssm"], i, 0, keepdims=False)
+                conv = lax.dynamic_index_in_dim(st["conv"], i, 0, keepdims=False)
+                m, nh, nconv = L.mamba_decode(bp["mamba"], cfg, hin, ssm,
+                                              conv.astype(hin.dtype))
+                st["ssm"] = lax.dynamic_update_index_in_dim(
+                    st["ssm"], nh.astype(st["ssm"].dtype), i, 0)
+                st["conv"] = lax.dynamic_update_index_in_dim(
+                    st["conv"], nconv.astype(st["conv"].dtype), i, 0)
+            if cfg.block == "attn":
+                h = h + a
+            elif cfg.block == "mamba":
+                h = h + m
+            else:
+                h = h + 0.5 * (a + m)
+            if cfg.d_ff:
+                hin = L.apply_norm(bp["norm2"], cfg, h)
+                y = (L.apply_moe(bp["ffn"], cfg, hin)[0] if cfg.is_moe
+                     else L.apply_mlp(bp["ffn"], cfg, hin))
+                h = h + y
+            h = constrain(h)
+            return h, st
+
+        h, new_layers = lax.fori_loop(
+            0, cfg.num_layers, body, (h, {k: cache[k] for k in cache_keys}))
+    else:
+        xs = {"bp": params["blocks"]}
+        for key in cache_keys:
+            xs[key] = cache[key]
+
+        def body(h, x):
+            return layer(x["bp"], h, x)
+
+        h, new_layers = lax.scan(body, h, xs)
+
+    new_cache = dict(cache)
+    new_cache.update(new_layers)
+    new_cache["pos"] = pos + 1
+    if new_kpos is not None:
+        new_cache["kpos"] = new_kpos
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,89 @@
+"""Optimization toggles for the §Perf hillclimb.
+
+The PAPER-FAITHFUL baseline is all-defaults; `launch/dryrun.py --opt k=v`
+flips individual flags so every EXPERIMENTS.md §Perf row is reproducible as
+baseline-vs-change.  Flags default OFF so tests exercise the baseline unless
+they opt in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass
+class PerfFlags:
+    # mamba selective scan: 0 = per-timestep lax.scan (baseline);
+    # N = outer scan over S/N chunks with an N-step unrolled inner body so
+    # XLA fuses the chunk and the ssm state stops round-tripping HBM per step
+    # (the pure-XLA analogue of the Pallas ssm_scan kernel).
+    mamba_chunk: int = 0
+    # flash attention: skip kv chunks that are fully masked (outside the
+    # causal/sliding-window band) instead of masking them — fewer chunk
+    # iterations, less score traffic, fewer flops.
+    attn_band_skip: bool = False
+    # decode: pick label/argmax paths that avoid gathers over the
+    # vocab-sharded logits (one-hot dot instead of take_along_axis).
+    ce_onehot: bool = False
+    # train: all-reduce gradients in bf16 instead of fp32 (halves the
+    # gradient-sync collective bytes; optimizer math stays fp32).
+    grad_bf16: bool = False
+    # decode: carry the stacked KV cache through a fori_loop with per-layer
+    # in-place dynamic-update-slice instead of scan-ys stacking.  The scan
+    # path makes XLA rewrite the FULL cache with a bf16->f32->bf16 roundtrip
+    # every layer iteration (measured 870 GB/step on qwen2-72b decode_32k).
+    decode_fori: bool = False
+    # decode: flash-decode attention via shard_map — the seq-sharded cache
+    # is attended locally per shard (partial softmax, pmax/psum combine) and
+    # only the owner shard writes the new token.  Avoids GSPMD's
+    # full-cache select/copy lowering of DUS on a sharded dim entirely.
+    decode_shard_map: bool = False
+    # MoE: dispatch tokens to expert buckets PER BATCH ROW (indices local to
+    # each data shard) instead of one global scatter — the global scatter
+    # from token-sharded to expert-sharded layouts makes GSPMD all-gather
+    # every token to every device.
+    moe_row_dispatch: bool = False
+    # serving: shard weights tensor/expert-parallel ONLY (resident weights,
+    # no FSDP all-gathers).  FSDP amortizes over training batches; at decode
+    # it all-gathers every layer's weights per token step.
+    serve_tp_only: bool = False
+    # dry-run artifact control: the CPU backend legalizes bf16 arithmetic to
+    # f32, wrapping the cache DUS in FULL-BUFFER converts that would not
+    # exist on the TPU target.  f32 caches sidestep the legalization so the
+    # dry-run traffic matches what TPU bf16 caches would do (modulo 2x raw
+    # cache bytes, which we report).
+    cache_f32: bool = False
+    # train remat policy: "full" (baseline: save only layer inputs) or
+    # "dots" (save no-batch-dim dot outputs, i.e. the weight-matmul
+    # activations; recompute only the cheap elementwise/attention math).
+    remat_policy: str = "full"
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(**kw) -> PerfFlags:
+    global FLAGS
+    FLAGS = dataclasses.replace(FLAGS, **kw)
+    return FLAGS
+
+
+def reset_flags() -> None:
+    global FLAGS
+    FLAGS = PerfFlags()
+
+
+def parse_opt(spec: str) -> dict:
+    """'mamba_chunk=16,attn_band_skip=1' -> kwargs dict."""
+    out = {}
+    for part in filter(None, spec.split(",")):
+        k, _, v = part.partition("=")
+        k = k.strip()
+        field = PerfFlags.__dataclass_fields__[k]
+        if field.type in ("int", int):
+            out[k] = int(v)
+        elif field.type in ("str", str):
+            out[k] = v.strip()
+        else:
+            out[k] = v.strip() in ("1", "true", "True", "yes")
+    return out

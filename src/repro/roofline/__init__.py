@@ -1,0 +1,3 @@
+from repro.roofline import analysis
+
+__all__ = ["analysis"]

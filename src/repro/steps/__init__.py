@@ -1,0 +1,3 @@
+from repro.steps import inputs, optim, serve, train
+
+__all__ = ["inputs", "optim", "serve", "train"]

@@ -1,0 +1,66 @@
+"""Checkpointing: param/opt pytrees <-> .npz files (no external deps).
+
+Keys encode the tree path (``blocks/attn/wq``); restore rebuilds into the
+reference structure (from init or eval_shape) and validates shapes/dtypes.
+Training state (data-stream step included) round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
+    flat, _ = tree_flatten_with_path(tree)
+    arrays = {}
+    for p, leaf in flat:
+        arrays[_path_key(p)] = np.asarray(leaf)
+    arrays["__metadata__"] = np.frombuffer(
+        json.dumps(metadata or {}).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # atomic write: tmp + rename
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def load(path: str, like: Any) -> tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (init output or eval_shape)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__metadata__"].tobytes()).decode())
+        flat, treedef = tree_flatten_with_path(like)
+        leaves = []
+        for p, ref in flat:
+            key = _path_key(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"{key}: shape {arr.shape} != expected {ref.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), meta

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns the batch dict a step consumes, with no
+device allocation.  For the stubbed modality frontends (per spec), the specs
+ARE the stub: precomputed patch/frame embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """VLM shapes budget `seq_len` across patches + text."""
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        return shape.seq_len - cfg.num_patches
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = text_len(cfg, shape)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": sds((B, S), i32),
+            "labels": sds((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+    else:  # decode: ONE new token against a seq_len-deep cache
+        batch = {"token": sds((B,), i32)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        batch["patches"] = sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        batch["frames"] = sds((B, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> Any:
+    """Decode-cache ShapeDtypeStruct pytree via eval_shape (no allocation)."""
+    assert shape.kind == "decode"
+    init = encdec.init_cache if cfg.cross_attention else lm.init_cache
+    return jax.eval_shape(
+        lambda: init(cfg, shape.global_batch, shape.seq_len, dtype=cache_dtype))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    """Materialise a random batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        k, key = jax.random.split(key) if hasattr(key, "shape") else (key, key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,78 @@
+"""Serving-step builders: prefill (prompt -> cache) and decode (one token).
+
+`decode` is what the decode_32k / long_500k dry-run shapes lower: ONE new
+token against a seq_len-deep KV cache (ring-buffer for sliding-window archs,
+recurrent state for SSM/hybrid).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.parallel import sharding
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       cache_dtype=jnp.bfloat16, max_len: int | None = None):
+    big = shape.global_batch >= sharding._dp_size(mesh)
+    constrain = sharding.hidden_constraint(mesh, big)
+
+    def prefill_step(params, batch):
+        if cfg.cross_attention:
+            return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
+                                  cache_dtype=cache_dtype, max_len=max_len,
+                                  constrain=constrain)
+        return lm.prefill(params, cfg, batch["tokens"],
+                          extra_embed=batch.get("patches"),
+                          cache_dtype=cache_dtype, max_len=max_len,
+                          constrain=constrain)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      greedy: bool = True):
+    from repro.perf_flags import FLAGS
+
+    big = shape.global_batch >= sharding._dp_size(mesh)
+    constrain = sharding.hidden_constraint(mesh, big)
+    shard_ctx = None
+    if FLAGS.decode_shard_map and not cfg.cross_attention and cfg.has_attention:
+        dp = sharding.dp_axes(mesh)
+        dps = dp if len(dp) > 1 else (dp[0] if dp else None)
+        b = dps if big else None
+        seq_axes = ("model",) if big else tuple(dp) + ("model",)
+        shard_ctx = (mesh, b, seq_axes)
+
+    def serve_step(params, cache, batch):
+        if cfg.cross_attention:
+            logits, cache = encdec.decode_step(params, cfg, batch["token"],
+                                               cache, constrain=constrain)
+        else:
+            logits, cache = lm.decode_step(params, cfg, batch["token"], cache,
+                                           constrain=constrain,
+                                           shard_ctx=shard_ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def serve_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    params_shape, cache_shape=None):
+    from repro.perf_flags import FLAGS
+
+    mode = "serve" if FLAGS.serve_tp_only else "train"
+    psh = sharding.param_shardings(mesh, params_shape, mode)
+    bsp = sharding.batch_pspecs(cfg, shape, mesh)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bsp.items()}
+    if cache_shape is None:
+        return psh, bsh
+    csp = sharding.cache_pspecs(cfg, shape, mesh, cache_shape)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), csp)
+    return psh, csh, bsh

@@ -1,0 +1,99 @@
+"""Train-step builder: remat'd forward + chunked cross-entropy + AdamW.
+
+The CE is computed in sequence chunks (logits per chunk, recomputed in the
+backward via jax.checkpoint) so (B, S, V) is never materialised — with
+V=152k vocabs that matters more than anything else in the step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.parallel import sharding
+from repro.steps import optim
+from repro.steps.inputs import input_specs
+
+
+def _chunk_size(S: int, target: int = 512) -> int:
+    for c in range(min(target, S), 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+def chunked_ce(h: jax.Array, head: jax.Array, labels: jax.Array,
+               constrain_logits=lambda x: x, target_chunk: int = 512) -> jax.Array:
+    """Mean next-token CE from final hidden states, chunked over sequence."""
+    B, S, D = h.shape
+    c = _chunk_size(S, target_chunk)
+    nc = S // c
+    hr = h.reshape(B, nc, c, D)
+    lr = labels.reshape(B, nc, c)
+
+    @jax.checkpoint
+    def body(tot, idx):
+        hc = jnp.moveaxis(hr, 1, 0)[idx]
+        lc = jnp.moveaxis(lr, 1, 0)[idx]
+        logits = (hc @ head.astype(hc.dtype)).astype(jnp.float32)
+        logits = constrain_logits(logits)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(lp, lc[..., None], axis=-1)[..., 0]
+        return tot - ll.sum(), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    return tot / (B * S)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     opt_cfg: optim.AdamWConfig = optim.AdamWConfig(),
+                     aux_weight: float = 0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    big = shape.global_batch >= sharding._dp_size(mesh)
+    constrain = sharding.hidden_constraint(mesh, big)
+    lspec = sharding.logits_pspec(mesh, big)
+    lsh = NamedSharding(mesh, lspec)
+    constrain_logits = lambda x: lax.with_sharding_constraint(x, lsh)
+
+    def loss_fn(params, batch):
+        if cfg.cross_attention:
+            h, aux = encdec.forward(params, cfg, batch["tokens"],
+                                    batch["frames"], remat=True,
+                                    return_hidden=True, constrain=constrain)
+            head = params["lm_head"]
+        else:
+            h, aux = lm.forward(params, cfg, batch["tokens"],
+                                extra_embed=batch.get("patches"), remat=True,
+                                return_hidden=True, constrain=constrain)
+            head = lm.head_weights(params, cfg)
+            if cfg.frontend == "vision":
+                h = h[:, cfg.num_patches:]   # loss only over text positions
+        ce = chunked_ce(h, head, batch["labels"], constrain_logits)
+        return ce + aux_weight * aux, (ce, aux)
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = optim.update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, params_shape):
+    """(in_shardings, out_shardings) for jax.jit(train_step)."""
+    psh = sharding.param_shardings(mesh, params_shape)
+    osh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+    bsp = sharding.batch_pspecs(cfg, shape, mesh)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bsp.items()}
+    scalar = NamedSharding(mesh, P())
+    metrics_sh = {k: scalar for k in ("loss", "ce", "moe_aux", "grad_norm")}
+    return (psh, osh, bsh), (psh, osh, metrics_sh)

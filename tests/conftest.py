@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own 512
+# via launch/dryrun.py before importing jax — never set that globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,117 @@
+"""Beyond-paper extensions: online re-calibration + LM generation serving."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adaptive import OnlineCalibrator, attach
+from repro.core.llm_backend import LMGenerateBackend
+from repro.core.queue_manager import CPU, NPU, Query
+from repro.core.simulator import DeviceModel
+from repro.core.windve import ModeledBackend, WindVE
+from repro.models import api
+
+
+class TestOnlineCalibrator:
+    def test_refit_recovers_line(self):
+        cal = OnlineCalibrator(slo_s=1.0, min_points=4, headroom=1.0)
+        for c in (1, 2, 4, 8, 4, 2, 8, 1):
+            cal.observe("NPU", c, 0.02 * c + 0.2)
+        depth, fit = cal.suggest_depth("NPU", current=10)
+        assert fit is not None
+        assert fit.alpha == pytest.approx(0.02, abs=1e-6)
+        assert depth == 40
+
+    def test_uninformative_window_keeps_current(self):
+        cal = OnlineCalibrator(slo_s=1.0)
+        for _ in range(20):
+            cal.observe("NPU", 4, 0.3)    # single concurrency level
+        depth, fit = cal.suggest_depth("NPU", current=7)
+        assert depth == 7 and fit is None
+
+    def test_attached_engine_adapts_depth(self):
+        # device drifts slower than the initial (wrong) depth assumes
+        slow = DeviceModel("drifty", beta=0.05, b=0.05, a=0.0)
+        ve = WindVE(ModeledBackend(slow, embed_dim=4), None,
+                    npu_depth=40, cpu_depth=0)   # 40 would breach a 0.6s SLO
+        try:
+            cal = OnlineCalibrator(slo_s=0.6, min_points=2, headroom=1.0)
+            attach(ve, cal, refit_every=1)
+            for wave in (1, 3, 1, 6, 2):   # distinct batch sizes per wave
+                futs = [ve.submit(length=75) for _ in range(wave)]
+                for f in futs:
+                    if f is not None:
+                        f.result(timeout=30)
+                time.sleep(0.05)           # let the worker go idle
+            # true depth at 0.6s SLO: (0.6-0.05)/0.05 = 11
+            assert ve.qm.queues[NPU].depth < 40
+            assert ve.qm.queues[NPU].depth >= 1
+        finally:
+            ve.shutdown()
+
+
+class TestLMServing:
+    @pytest.fixture(scope="class")
+    def backend(self):
+        cfg = get_config("stablelm-1.6b").smoke()
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        return LMGenerateBackend(cfg, params, max_prompt=16, max_new_tokens=4)
+
+    def test_generate_batch_shapes(self, backend):
+        qs = [Query(qid=i, length=8) for i in range(3)]
+        outs = backend.embed_batch(qs)
+        assert len(outs) == 3
+        for o in outs:
+            assert o.shape == (4,)
+            assert o.dtype == np.int32
+            assert (o >= 0).all() and (o < backend.cfg.vocab_size).all()
+
+    def test_lm_behind_windve_queue_manager(self, backend):
+        """The paper's technique applied to an assigned arch: Algorithm-1
+        dispatch + BUSY semantics around token generation."""
+        ve = WindVE(backend, None, npu_depth=2, cpu_depth=0)
+        try:
+            futs = [ve.submit(length=8) for _ in range(4)]
+            accepted = [f for f in futs if f is not None]
+            assert len(accepted) == 2 and ve.stats.rejected == 2
+            outs = [f.result(timeout=120) for f in accepted]
+            assert all(o.shape == (4,) for o in outs)
+        finally:
+            ve.shutdown()
+
+    def test_greedy_matches_direct_decode(self, backend):
+        """Backend generation == direct prefill+decode loop."""
+        import jax.numpy as jnp
+        from repro.models import lm
+        cfg, params = backend.cfg, backend.params
+        ids = np.arange(2, 10, dtype=np.int32)
+        out = backend.embed_batch([Query(qid=1, payload=ids, length=8)])[0]
+        toks = np.ones((1, 16), np.int32)
+        toks[0, -8:] = ids
+        logits, cache = lm.prefill(params, cfg, jnp.asarray(toks),
+                                   max_len=20, cache_dtype=jnp.float32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        want = [int(tok[0])]
+        for _ in range(3):
+            lg, cache = lm.decode_step(params, cfg, tok, cache)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            want.append(int(tok[0]))
+        assert list(out) == want
+
+
+def test_multi_worker_pool_drains_in_parallel():
+    slow = DeviceModel("slow", beta=0.2, b=0.0, a=0.0)
+    # 4 queries, depth 4, batches of 1: 1 worker ~0.8s, 4 workers ~0.2s
+    t0 = time.monotonic()
+    ve = WindVE(ModeledBackend(slow, embed_dim=2), None, npu_depth=4,
+                cpu_depth=0, max_batch={NPU: 1}, workers={NPU: 4})
+    try:
+        futs = [ve.submit() for _ in range(4)]
+        for f in futs:
+            f.result(timeout=10)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 0.7, f"parallel workers too slow: {elapsed}"
+    finally:
+        ve.shutdown()

@@ -1,0 +1,56 @@
+"""§4.4 CPU affinity / NUMA planner tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affinity import NumaTopology, numa_crossings, plan_affinity
+
+KUNPENG = NumaTopology(total_cores=128, numa_nodes=4)   # the paper's box
+
+
+def test_reverse_index_order():
+    cores = plan_affinity(KUNPENG, 8)
+    assert cores == list(range(127, 119, -1))
+
+
+def test_no_numa_crossing_when_fits():
+    cores = plan_affinity(KUNPENG, 32)      # one full NUMA
+    assert numa_crossings(KUNPENG, cores) == 0
+
+
+def test_first_numa_reserved():
+    # paper §5.4: at most 96 of 128 cores usable (first NUMA = framework)
+    cores = plan_affinity(KUNPENG, 96)
+    assert min(cores) == 32
+    with pytest.raises(ValueError):
+        plan_affinity(KUNPENG, 97)
+
+
+def test_large_worker_spans_numas_from_top():
+    cores = plan_affinity(KUNPENG, 64)
+    assert max(cores) == 127
+    assert numa_crossings(KUNPENG, cores) == 1
+
+
+def test_single_numa_box_not_reserved():
+    topo = NumaTopology(total_cores=8, numa_nodes=1)
+    assert plan_affinity(topo, 8) == list(range(7, -1, -1))
+
+
+@given(numas=st.integers(1, 8), cpn=st.integers(2, 32),
+       need=st.integers(1, 64))
+@settings(max_examples=200, deadline=None)
+def test_plan_properties(numas, cpn, need):
+    topo = NumaTopology(total_cores=numas * cpn, numa_nodes=numas)
+    usable = topo.total_cores - (cpn if numas > 1 else 0)
+    if need > usable:
+        with pytest.raises(ValueError):
+            plan_affinity(topo, need)
+        return
+    cores = plan_affinity(topo, need)
+    assert len(cores) == len(set(cores)) == need
+    # reserved NUMA untouched
+    if numas > 1:
+        assert all(c >= cpn for c in cores)
+    # paper rule: if the worker fits one NUMA it must not cross
+    if need <= cpn:
+        assert numa_crossings(topo, cores) == 0

@@ -1,0 +1,74 @@
+"""§3 cost model and §3.2/§4.2.3 savings/bounds tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (Deployment, concurrency_uplift_bound,
+                                   cost_peak, cost_throughput, peak_saving,
+                                   throughput_uplift, waiting_slots)
+from repro.core.simulator import PAPER_DEVICES
+
+
+def test_waiting_slots_eq4():
+    assert waiting_slots(t_total_max=1.0, t_proc=0.3) == 2
+    assert waiting_slots(t_total_max=2.0, t_proc=0.3) == 5
+    assert waiting_slots(t_total_max=0.2, t_proc=0.3) == 0
+
+
+def test_paper_headline_numbers():
+    # Table 1, V100 + Xeon @2s: 96 + 22
+    assert throughput_uplift(96, 22) == pytest.approx(0.229, abs=1e-3)
+    assert peak_saving(96, 22) == pytest.approx(0.186, abs=1e-3)
+    # @1s: 44 + 8 -> 18.2%
+    assert throughput_uplift(44, 8) == pytest.approx(0.182, abs=1e-3)
+
+
+def test_peak_cost_monotone_in_concurrency():
+    c1 = cost_peak(1000, 96)
+    c2 = cost_peak(1000, 118)
+    assert c2 < c1
+    assert (c1 - c2) / c1 == pytest.approx(peak_saving(96, 22), abs=1e-9)
+
+
+def test_throughput_cost_eq5():
+    # N/n / T * D * P
+    c = cost_throughput(n_queries_per_s=100, t_total_max=1.0, t_proc=0.25,
+                        throughput=10, d=Deployment(2, 5.0))
+    assert c == pytest.approx(100 / 3 / 10 * 2 * 5.0)
+
+
+def test_ineq19_bound_holds_for_paper_devices():
+    """C_CPU/C_NPU < alpha_NPU/alpha_CPU (§4.2.3) on the calibrated devices."""
+    for model, npu_k, cpu_k, c_npu, c_cpu, slo in [
+        ("bge", "tesla-v100/bge", "xeon-e5-2690/bge", 96, 22, 2.0),
+        ("bge", "tesla-v100/bge", "xeon-e5-2690/bge", 44, 8, 1.0),
+    ]:
+        npu, cpu = PAPER_DEVICES[npu_k], PAPER_DEVICES[cpu_k]
+        # effective alpha at the operating point (secant slope)
+        a_npu = (npu.latency(c_npu) - npu.beta) / c_npu
+        a_cpu = (cpu.latency(c_cpu) - cpu.beta) / c_cpu
+        assert throughput_uplift(c_npu, c_cpu) < \
+            concurrency_uplift_bound(a_npu, a_cpu) + 1e-9
+
+
+@given(c_npu=st.integers(1, 500), c_cpu=st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_savings_identities(c_npu, c_cpu):
+    s = peak_saving(c_npu, c_cpu)
+    u = throughput_uplift(c_npu, c_cpu)
+    assert 0 <= s < 1
+    assert u >= 0
+    # s = u / (1 + u)
+    assert s == pytest.approx(u / (1 + u), abs=1e-12)
+
+
+def test_looser_slo_gives_bigger_uplift():
+    """Ineq. 23: relaxing the SLO increases the uplift (beta_CPU > beta_NPU)."""
+    npu, cpu = PAPER_DEVICES["tesla-v100/bge"], PAPER_DEVICES["xeon-e5-2690/bge"]
+    from repro.core.estimator import fine_tune_depth
+    from repro.core.simulator import profile_fn_for
+    ups = []
+    for slo in (1.0, 2.0):
+        cn = fine_tune_depth(profile_fn_for(npu), slo, start=100, radius=60)
+        cc = fine_tune_depth(profile_fn_for(cpu), slo, start=30, radius=29)
+        ups.append(throughput_uplift(cn, cc))
+    assert ups[1] > ups[0]

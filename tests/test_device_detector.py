@@ -1,0 +1,35 @@
+"""Algorithm 2 branch coverage."""
+from repro.core.device_detector import DeviceInventory, detect
+
+
+def test_npu_and_cpu_heter_on():
+    r = detect(DeviceInventory(npus=2, cpus=1), heter_requested=True)
+    assert (r.device_main, r.device_auxiliary) == ("npu", "cpu")
+    assert (r.worker_num_main, r.worker_num_auxiliary) == (2, 1)
+    assert r.heter_enable
+
+
+def test_npu_and_cpu_heter_off():
+    r = detect(DeviceInventory(npus=2, cpus=1), heter_requested=False)
+    assert (r.device_main, r.device_auxiliary) == ("npu", "none")
+    assert not r.heter_enable
+    assert r.worker_num_auxiliary == 0
+
+
+def test_cpu_only_forces_heter_off():
+    r = detect(DeviceInventory(npus=0, cpus=4), heter_requested=True)
+    assert (r.device_main, r.device_auxiliary) == ("cpu", "none")
+    assert not r.heter_enable
+    assert r.worker_num_main == 4
+
+
+def test_no_devices():
+    r = detect(DeviceInventory(npus=0, cpus=0))
+    assert r.device_main == "none"
+    assert not r.heter_enable
+
+
+def test_probe_on_this_container_is_cpu_only():
+    r = detect()  # jax sees only CpuDevice here
+    assert r.device_main == "cpu"
+    assert not r.heter_enable

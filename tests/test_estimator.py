@@ -1,0 +1,77 @@
+"""Linear-regression queue-depth estimator (Eq. 12) tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import (LatencyFit, estimate_depth, fine_tune_depth,
+                                  fit_latency, stress_test_depth)
+
+
+class TestFit:
+    def test_exact_linear_recovery(self):
+        c = [1, 4, 16, 64]
+        t = [0.3 + 0.02 * x for x in c]
+        fit = fit_latency(c, t)
+        assert fit.alpha == pytest.approx(0.02, abs=1e-9)
+        assert fit.beta == pytest.approx(0.3, abs=1e-9)
+        assert fit.r2 == pytest.approx(1.0, abs=1e-9)
+
+    def test_nonnegative_constraint(self):
+        fit = fit_latency([1, 2, 3, 4], [1.0, 0.8, 0.6, 0.4])  # negative slope
+        assert fit.alpha >= 0 and fit.beta >= 0
+
+    def test_depth_formula(self):
+        fit = LatencyFit(alpha=0.0166, beta=0.27, r2=1.0)
+        # paper V100/bge ballpark: (1 - 0.27)/0.0166 = 43.9 -> 43
+        assert fit.max_concurrency(1.0) == 43
+
+    def test_eq11_single_query_timeout(self):
+        # paper Eq. 11: t^1_proc > T -> CPU unusable, depth 0
+        fit = LatencyFit(alpha=0.2, beta=0.9, r2=1.0)
+        assert fit.max_concurrency(1.0) == 0
+
+    def test_needs_two_points(self):
+        with pytest.raises(ValueError):
+            fit_latency([1], [0.5])
+
+
+@given(alpha=st.floats(0.001, 0.5), beta=st.floats(0.0, 0.9),
+       slo=st.floats(1.0, 4.0))
+@settings(max_examples=200, deadline=None)
+def test_estimator_exact_on_linear_devices(alpha, beta, slo):
+    """On a truly linear device the estimator IS the ground truth."""
+    profile = lambda c: alpha * c + beta
+    depth, fit = estimate_depth(profile, slo)
+    assert fit.alpha == pytest.approx(alpha, rel=1e-6)
+    # the returned depth meets the SLO and depth+1 would break it
+    if depth > 0:
+        assert profile(depth) <= slo + 1e-9
+        assert profile(depth + 1) > slo - 1e-9
+
+
+@given(alpha=st.floats(0.01, 0.2), beta=st.floats(0.0, 0.5),
+       step=st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_stress_test_never_exceeds_truth(alpha, beta, step):
+    profile = lambda c: alpha * c + beta
+    truth = int(np.floor((2.0 - beta) / alpha))
+    st_depth = stress_test_depth(profile, 2.0, step=step)
+    assert st_depth <= truth + 1         # +1 for exact-boundary float error
+    assert truth - st_depth <= step      # at most one step of undershoot
+
+
+def test_fine_tune_finds_peak():
+    profile = lambda c: 0.05 * c + 0.2
+    truth = int((1.0 - 0.2) / 0.05)      # 16
+    assert fine_tune_depth(profile, 1.0, start=12, radius=8) == truth
+    assert fine_tune_depth(profile, 1.0, start=30, radius=8) == truth
+
+
+def test_estimator_beats_stress_test_on_convex_device():
+    """The paper's Table 3 story: stress test with step 8 misses the peak."""
+    profile = lambda c: 0.25 + 0.0154 * c + 2.75e-5 * c * c
+    est, _ = estimate_depth(profile, 1.0)
+    stress = stress_test_depth(profile, 1.0, step=8)
+    fine = fine_tune_depth(profile, 1.0, start=est, radius=16)
+    assert stress < fine                 # step-8 undershoots
+    assert abs(est - fine) <= 8          # regression lands near the peak

@@ -1,0 +1,214 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (attention_ref, flash_attention,
+                                           flash_attention_pallas)
+from repro.kernels.rmsnorm import rmsnorm_pallas, rmsnorm_ref
+from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------- flash ----
+FLASH_CASES = [
+    # B, H, KV, Sq, Sk, hd, causal, window
+    (2, 4, 2, 256, 256, 64, True, 0),     # GQA causal, aligned
+    (1, 4, 4, 128, 384, 64, False, 0),    # MHA cross-shaped, Sk > Sq
+    (2, 8, 2, 200, 200, 128, True, 64),   # sliding window + padding
+    (1, 2, 1, 96, 96, 32, True, 0),       # small head_dim, padding
+    (1, 6, 3, 130, 257, 64, True, 0),     # both dims ragged
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, H, KV, Sq, Sk, hd, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, hd), jnp.float32).astype(dtype)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_flash_jnp_backend_matches_ref():
+    q = jax.random.normal(KEY, (2, 4, 160, 64))
+    k = jax.random.normal(KEY, (2, 2, 160, 64))
+    v = jax.random.normal(KEY, (2, 2, 160, 64))
+    ref = attention_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_block_size_invariance():
+    q = jax.random.normal(KEY, (1, 2, 256, 64))
+    k = jax.random.normal(KEY, (1, 2, 256, 64))
+    v = jax.random.normal(KEY, (1, 2, 256, 64))
+    a = flash_attention_pallas(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention_pallas(q, k, v, block_q=128, block_k=256,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------- ssm ------
+SSM_CASES = [
+    # B, S, DI, N, chunk, block_di
+    (2, 256, 512, 16, 128, 512),
+    (1, 128, 1024, 16, 64, 256),
+    (2, 64, 256, 8, 64, 256),
+    (1, 64, 128, 16, 16, 128),
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_vs_ref(case, dtype):
+    B, S, DI, N, chunk, bdi = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, DI), jnp.float32).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, DI))) * 0.1
+          ).astype(dtype)
+    Bm = jax.random.normal(ks[2], (B, S, N), jnp.float32).astype(dtype)
+    Cm = jax.random.normal(ks[3], (B, S, N), jnp.float32).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (DI, N)) * 0.5)
+    yr, hr = ssm_scan_ref(x, dt, Bm, Cm, A)
+    yp, hp = ssm_scan_pallas(x, dt, Bm, Cm, A, chunk=chunk, block_di=bdi,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr),
+                               atol=tol(dtype) * 10, rtol=tol(dtype) * 10)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hr),
+                               atol=tol(dtype) * 10, rtol=tol(dtype) * 10)
+
+
+def test_ssm_chunking_invariance():
+    B, S, DI, N = 1, 128, 256, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, DI))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, DI))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (DI, N)) * 0.5)
+    y1, h1 = ssm_scan_pallas(x, dt, Bm, Cm, A, chunk=32, interpret=True)
+    y2, h2 = ssm_scan_pallas(x, dt, Bm, Cm, A, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+def test_ssm_matches_model_layer_scan():
+    """The model's mamba_scan_ref and the kernel ref must agree."""
+    from repro.models.layers import mamba_scan_ref
+    B, S, DI, N = 2, 64, 128, 16
+    ks = jax.random.split(KEY, 5)
+    xc = jax.random.normal(ks[0], (B, S, DI))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, DI))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (DI, N)) * 0.5)
+    y1, h1 = mamba_scan_ref(xc, dt, Bm, Cm, A)
+    y2, h2 = ssm_scan_ref(xc, dt, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+# ---------------------------------------------------------------- rmsnorm --
+@pytest.mark.parametrize("shape", [(4, 128, 512), (2, 100, 384), (300, 256),
+                                   (1, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    s = jax.random.normal(KEY, (shape[-1],), jnp.float32)
+    ref = rmsnorm_ref(x, s)
+    got = rmsnorm_pallas(x, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.configs import get_config
+    from repro.models.layers import apply_norm
+    cfg = get_config("stablelm-1.6b").smoke()
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    scale = jnp.ones((cfg.d_model,)) * 1.3
+    a = apply_norm({"scale": scale}, cfg, x)
+    b = rmsnorm_ref(x, scale, eps=cfg.norm_eps)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------- decode ---
+from repro.kernels.flash_decode import decode_attention_ref, flash_decode_pallas
+
+FD_CASES = [
+    # B, KV, G, S, hd, pos, window, block_k
+    (2, 2, 4, 512, 64, 300, 0, 256),      # partial-filled cache
+    (1, 4, 2, 384, 128, 383, 0, 128),     # full cache, ragged blocks
+    (2, 1, 8, 256, 64, 200, 64, 256),     # sliding window
+    (1, 2, 1, 100, 32, 50, 0, 64),        # padding + small dims
+]
+
+
+@pytest.mark.parametrize("case", FD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_vs_ref(case, dtype):
+    B, KV, G, S, hd, pos, window, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32).astype(dtype)
+    kpos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+    ref = decode_attention_ref(q, k, v, kpos, pos, window=window)
+    got = flash_decode_pallas(q, k, v, kpos, pos, window=window, block_k=bk,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype) * 2, rtol=tol(dtype) * 2)
+
+
+def test_flash_decode_ring_buffer_positions():
+    """Slots hold non-monotonic absolute positions (sliding-window ring)."""
+    B, KV, G, S, hd, W = 1, 2, 2, 128, 64, 128
+    pos = 200                      # wrapped: slot i holds pos (200-127..200)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    base = jnp.arange(S)
+    kpos = jnp.where(base <= pos % S, base + (pos // S) * S,
+                     base + (pos // S - 1) * S)
+    ref = decode_attention_ref(q, k, v, kpos, pos, window=W)
+    got = flash_decode_pallas(q, k, v, kpos, pos, window=W, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_flash_decode_matches_model_attn_decode_read():
+    """Kernel == the serving path's attention math (layers.attn_decode_read
+    modulo the wo projection)."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+    cfg = get_config("stablelm-1.6b").smoke()
+    hd = cfg.resolved_head_dim
+    B, S = 2, 64
+    ks = jax.random.split(KEY, 4)
+    p = L.init_attention(ks[0], cfg, jnp.float32)
+    x1 = jax.random.normal(ks[1], (B, 1, cfg.d_model))
+    ck = jax.random.normal(ks[2], (B, S, cfg.num_kv_heads, hd))
+    cv = jax.random.normal(ks[3], (B, S, cfg.num_kv_heads, hd))
+    pos = jnp.asarray(40)
+    kpos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+    want = L.attn_decode_read(p, cfg, x1, pos, ck, cv, kpos)
+    q = L.project_q(p, cfg, x1, pos).reshape(B, cfg.num_kv_heads, -1, hd)
+    out = flash_decode_pallas(q, ck, cv, kpos, pos, interpret=True)
+    got = out.reshape(B, 1, -1) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)

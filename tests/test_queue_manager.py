@@ -1,0 +1,118 @@
+"""Algorithm 1 semantics + property-based invariants."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queue_manager import (BUSY, CPU, NPU, BoundedQueue, Query,
+                                      QueueManager)
+
+
+def q(i: int) -> Query:
+    return Query(qid=i)
+
+
+class TestAlgorithm1:
+    def test_npu_priority(self):
+        qm = QueueManager(npu_depth=2, cpu_depth=2)
+        assert qm.dispatch(q(1)) == NPU
+        assert qm.dispatch(q(2)) == NPU
+
+    def test_overflow_to_cpu_then_busy(self):
+        qm = QueueManager(npu_depth=1, cpu_depth=1)
+        assert qm.dispatch(q(1)) == NPU
+        assert qm.dispatch(q(2)) == CPU
+        assert qm.dispatch(q(3)) == BUSY
+
+    def test_heter_disabled_rejects_on_npu_full(self):
+        qm = QueueManager(npu_depth=1, cpu_depth=8, heter_enable=False)
+        assert qm.dispatch(q(1)) == NPU
+        assert qm.dispatch(q(2)) == BUSY
+
+    def test_zero_cpu_depth_means_no_cpu_queue(self):
+        qm = QueueManager(npu_depth=1, cpu_depth=0)
+        assert not qm.heter_enable
+        assert qm.dispatch(q(1)) == NPU
+        assert qm.dispatch(q(2)) == BUSY
+
+    def test_max_concurrency(self):
+        assert QueueManager(44, 8).max_concurrency == 52
+        assert QueueManager(96, 22).max_concurrency == 118
+
+    def test_inflight_counts_toward_depth(self):
+        # paper: C^max bounds concurrency, not just waiting items
+        qm = QueueManager(npu_depth=2, cpu_depth=0)
+        qm.dispatch(q(1))
+        qm.dispatch(q(2))
+        batch = qm.queues[NPU].pop_batch(2)
+        assert len(batch) == 2
+        assert qm.dispatch(q(3)) == BUSY       # still in flight
+        qm.queues[NPU].finish(2)
+        assert qm.dispatch(q(4)) == NPU
+
+
+@given(npu_depth=st.integers(0, 20), cpu_depth=st.integers(0, 20),
+       n=st.integers(0, 100))
+@settings(max_examples=200, deadline=None)
+def test_dispatch_invariants(npu_depth, cpu_depth, n):
+    """Invariants: queues never exceed depth; counts conserve; BUSY only
+    when every queue is full; NPU fills before CPU receives anything."""
+    if npu_depth <= 0:
+        npu_depth = max(npu_depth, 0)
+    qm = QueueManager(npu_depth, cpu_depth)
+    results = [qm.dispatch(q(i)) for i in range(n)]
+    n_npu = results.count(NPU)
+    n_cpu = results.count(CPU)
+    n_busy = results.count(BUSY)
+    assert n_npu + n_cpu + n_busy == n
+    assert n_npu <= npu_depth
+    assert n_cpu <= (cpu_depth if qm.heter_enable else 0)
+    assert n_npu == min(n, npu_depth)                     # NPU priority
+    if qm.heter_enable:
+        assert n_cpu == min(max(n - npu_depth, 0), cpu_depth)
+    if n_busy:
+        assert len(qm.queues[NPU]) >= npu_depth
+        if qm.heter_enable:
+            assert len(qm.queues[CPU]) >= cpu_depth
+    assert qm.stats.accepted == n_npu + n_cpu
+    assert qm.stats.busy == n_busy
+
+
+@given(depth=st.integers(1, 16), ops=st.lists(
+    st.tuples(st.booleans(), st.integers(1, 4)), max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_bounded_queue_never_overflows(depth, ops):
+    bq = BoundedQueue(depth)
+    pushed = 0
+    for is_push, k in ops:
+        if is_push:
+            for i in range(k):
+                if bq.push(q(pushed)):
+                    pushed += 1
+                assert len(bq) <= depth
+        else:
+            batch = bq.pop_batch(k)
+            assert len(bq) <= depth
+            bq.finish(len(batch))
+    assert len(bq) <= depth
+
+
+def test_thread_safety_under_concurrent_dispatch():
+    qm = QueueManager(50, 25)
+    results = []
+    lock = threading.Lock()
+
+    def worker(base):
+        local = [qm.dispatch(q(base + i)) for i in range(30)]
+        with lock:
+            results.extend(local)
+
+    threads = [threading.Thread(target=worker, args=(i * 100,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results.count(NPU) == 50
+    assert results.count(CPU) == 25
+    assert results.count(BUSY) == 120 - 75

@@ -1,0 +1,141 @@
+"""Sharding-rule tests: every param/cache spec must exactly divide on the
+production mesh for EVERY assigned arch (jit input shardings require it)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.models import api
+from repro.parallel import sharding
+from repro.steps.inputs import cache_specs
+
+
+class FakeMesh:
+    """Mesh stand-in (shape/axis names only) so tests don't need 512 devs."""
+
+    def __init__(self, shape_map):
+        self.axis_names = tuple(shape_map)
+        self.shape = dict(shape_map)
+
+        class _D:
+            def __init__(self, s):
+                self.shape = s
+
+        self.devices = _D(tuple(shape_map.values()))
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESH_1POD = FakeMesh({"data": 16, "model": 16})
+MESH_2POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _check_divisible(mesh, tree_shape, specs):
+    flat_s, _ = tree_flatten_with_path(tree_shape)
+    flat_p, _ = tree_flatten_with_path(specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), (_, spec) in zip(flat_s, flat_p):
+        assert len(spec) <= leaf.ndim, f"{path}: spec longer than rank"
+        for d, entry in zip(leaf.shape, tuple(spec)):
+            size = _axis_size(mesh, entry)
+            assert d % size == 0, \
+                f"{jax.tree_util.keystr(path)}: dim {d} not divisible by {size}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", [MESH_1POD, MESH_2POD],
+                         ids=["16x16", "2x16x16"])
+def test_param_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+    specs = sharding.param_pspecs(mesh, params_shape)
+    _check_divisible(mesh, params_shape, specs)
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "hymba-1.5b",
+                                  "qwen2-72b", "whisper-tiny",
+                                  "qwen3-moe-30b-a3b"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape_name, ):
+    from repro.configs import get_shape, shape_supported
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, _ = shape_supported(cfg, shape)
+    if not ok:
+        pytest.skip("shape unsupported for arch (by design)")
+    cs = cache_specs(cfg, shape)
+    for mesh in (MESH_1POD, MESH_2POD):
+        specs = sharding.cache_pspecs(cfg, shape, mesh, cs)
+        _check_divisible(mesh, cs, specs)
+
+
+def test_moe_expert_sharding_primary_and_fallback():
+    qwen = get_config("qwen3-moe-30b-a3b")     # 128 experts: divides 16
+    granite = get_config("granite-moe-3b-a800m")  # 40 experts: does not
+    for cfg, expect_expert_sharded in ((qwen, True), (granite, False)):
+        ps = jax.eval_shape(
+            lambda c=cfg: api.init_params(jax.random.PRNGKey(0), c))
+        specs = sharding.param_pspecs(MESH_1POD, ps)
+        spec = specs["blocks"]["ffn"]["w_gate"]
+        if expect_expert_sharded:
+            assert spec[1] == "model"          # (L, E, D, F): E on model
+        else:
+            assert spec[1] is None             # fallback: F on model instead
+            assert spec[3] == "model"
+
+
+def test_embed_vocab_fallback_on_odd_vocab():
+    hymba = get_config("hymba-1.5b")           # vocab 32001: prime-ish
+    ps = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), hymba))
+    specs = sharding.param_pspecs(MESH_1POD, ps)
+    assert specs["embed"][0] is None           # can't shard 32001 by 16
+    assert specs["embed"][1] == "data"
+
+
+def test_batch_specs_by_kind():
+    cfg = get_config("internvl2-2b")
+    for name, shape in INPUT_SHAPES.items():
+        specs = sharding.batch_pspecs(cfg, shape, MESH_1POD)
+        if shape.kind == "decode":
+            assert set(specs) == {"token"}      # stub patches live in cache
+        else:
+            assert "patches" in specs
+    long = INPUT_SHAPES["long_500k"]
+    specs = sharding.batch_pspecs(cfg, long, MESH_1POD)
+    assert specs["token"] == P(None)            # batch=1: no batch sharding
+
+
+def test_long_context_cache_seq_sharded_over_all_axes():
+    cfg = get_config("falcon-mamba-7b")
+    from repro.configs import get_shape
+    shape = get_shape("long_500k")
+    cs = cache_specs(cfg, shape)
+    specs = sharding.cache_pspecs(cfg, shape, MESH_1POD, cs)
+    # ssm state: DI over model
+    assert specs["ssm"][2] == "model"
+    shape32 = get_shape("decode_32k")
+    cfg2 = get_config("qwen2-72b")
+    cs2 = cache_specs(cfg2, shape32)
+    specs2 = sharding.cache_pspecs(cfg2, shape32, MESH_1POD, cs2)
+    assert specs2["k"][2] == "model"            # cache seq over model
+    assert specs2["k"][1] == "data"             # batch over data

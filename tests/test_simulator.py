@@ -1,0 +1,85 @@
+"""Calibrated device models + discrete-event simulation tests."""
+import pytest
+
+from repro.core.queue_manager import CPU, NPU
+from repro.core.simulator import (PAPER_DEVICES, DeviceModel, ServingSimulator,
+                                  cpu_core_scaled, diurnal_trace,
+                                  profile_fn_for, solve_anchors)
+
+
+class TestCalibration:
+    @pytest.mark.parametrize("dev,c1,c2", [
+        ("tesla-v100/bge", 44, 96), ("xeon-e5-2690/bge", 8, 22),
+        ("atlas-300i-duo/bge", 84, 172), ("kunpeng-920/bge", 2, 8),
+        ("tesla-v100/jina", 48, 112), ("xeon-e5-2690/jina", 11, 30),
+    ])
+    def test_anchors_hit_exactly(self, dev, c1, c2):
+        d = PAPER_DEVICES[dev]
+        assert d.latency(c1) == pytest.approx(1.0, abs=1e-9)
+        assert d.latency(c2) == pytest.approx(2.0, abs=1e-9)
+
+    def test_convexity_nonnegative(self):
+        for d in PAPER_DEVICES.values():
+            assert d.a >= -1e-12 and d.b > 0
+
+    def test_solve_anchors_roundtrip(self):
+        b, a = solve_anchors(0.3, 10, 1.0, 40, 2.0)
+        assert 0.3 + b * 10 + a * 100 == pytest.approx(1.0)
+        assert 0.3 + b * 40 + a * 1600 == pytest.approx(2.0)
+
+    def test_length_scaling_monotone(self):
+        d = PAPER_DEVICES["tesla-v100/bge"]
+        assert d.latency(44, length=500) > d.latency(44, length=75)
+        assert d.latency(44, length=75) == pytest.approx(1.0)
+
+    def test_core_scaling(self):
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        fewer = cpu_core_scaled(cpu, cores=22, full_cores=44)
+        assert fewer.latency(8) > cpu.latency(8)
+        assert fewer.beta == cpu.beta          # model-load cost unchanged
+
+
+class TestDES:
+    def test_burst_within_capacity_no_violations(self):
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        r = ServingSimulator(npu, cpu, 96, 22, slo_s=2.0).run_burst(118)
+        assert r.accepted == 118
+        assert r.rejected == 0
+        assert r.violations == 0
+
+    def test_offload_expands_concurrency_22_9_pct(self):
+        """The paper's Table 1 @2s: 96 -> 118 (+22.9%)."""
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        base = ServingSimulator(npu, None, 96, 0, slo_s=2.0).run_burst(140)
+        wind = ServingSimulator(npu, cpu, 96, 22, slo_s=2.0).run_burst(140)
+        assert base.max_ok_concurrency == 96
+        assert wind.max_ok_concurrency == 118
+        uplift = (wind.max_ok_concurrency - base.max_ok_concurrency) / \
+            base.max_ok_concurrency
+        assert uplift == pytest.approx(22 / 96, abs=1e-9)
+
+    def test_overload_rejects_rather_than_violates(self):
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        r = ServingSimulator(npu, cpu, 96, 22, slo_s=2.0).run_burst(200)
+        assert r.rejected == 200 - 118
+        assert r.violations == 0
+
+    def test_sequential_arrivals_reuse_queue(self):
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        sim = ServingSimulator(npu, None, 44, 0, slo_s=1.0)
+        arrivals = [(3.0 * i, 75) for i in range(5)]   # fully spaced out
+        r = sim.run(arrivals)
+        assert r.accepted == 5 and r.rejected == 0
+        assert all(q.e2e_latency <= 1.0 + 1e-9 for q in r.completed)
+
+    def test_diurnal_trace_shape(self):
+        tr = diurnal_trace(60, base_rate=2, peak_rate=20, seed=3)
+        assert all(0 <= t <= 60 for t, _ in tr)
+        assert [t for t, _ in tr] == sorted(t for t, _ in tr)
+        # peak half of the day should carry more traffic than the trough half
+        mid = [t for t, _ in tr if 15 <= t < 45]
+        edge = [t for t, _ in tr if t < 15 or t >= 45]
+        assert len(mid) > len(edge)

@@ -1,0 +1,109 @@
+"""End-to-end system behaviour: the paper's headline claims reproduced.
+
+These are the EXPERIMENTS.md §Paper-repro acceptance tests — if they pass,
+the benchmarks' numbers match the published tables within tolerance."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.estimator import (estimate_depth, fine_tune_depth,
+                                  stress_test_depth)
+from repro.core.simulator import (PAPER_DEVICES, ServingSimulator,
+                                  profile_fn_for)
+
+
+def depths_for(npu_key: str, cpu_key: str, slo: float):
+    pn = profile_fn_for(PAPER_DEVICES[npu_key])
+    pc = profile_fn_for(PAPER_DEVICES[cpu_key])
+    dn = fine_tune_depth(pn, slo, start=stress_test_depth(pn, slo) or 8,
+                         radius=16)
+    dc = fine_tune_depth(pc, slo, start=max(stress_test_depth(pc, slo), 4),
+                         radius=16)
+    return dn, dc
+
+
+class TestTable1Bge:
+    """Table 1: WindVE vs FlagEmbedding concurrency on bge."""
+
+    def test_v100_xeon_1s(self):
+        dn, dc = depths_for("tesla-v100/bge", "xeon-e5-2690/bge", 1.0)
+        assert dn == 44 and dc == 8                      # 44 + 8
+        assert throughput_uplift(dn, dc) == pytest.approx(0.182, abs=0.01)
+
+    def test_v100_xeon_2s(self):
+        dn, dc = depths_for("tesla-v100/bge", "xeon-e5-2690/bge", 2.0)
+        assert dn == 96 and dc == 22                     # 96 + 22
+        assert peak_saving(dn, dc) == pytest.approx(0.186, abs=0.01)
+
+    def test_atlas_kunpeng_rows_close(self):
+        # noisy devices: within a small tolerance of the published 84+1/172+8
+        dn1, dc1 = depths_for("atlas-300i-duo/bge", "kunpeng-920/bge", 1.0)
+        dn2, dc2 = depths_for("atlas-300i-duo/bge", "kunpeng-920/bge", 2.0)
+        assert abs(dn1 - 84) <= 4 and dc1 <= 4
+        assert abs(dn2 - 172) <= 6 and abs(dc2 - 8) <= 4
+        # qualitative claim: smaller CPU-NPU gap -> larger uplift
+        up_v100 = throughput_uplift(*depths_for(
+            "tesla-v100/bge", "xeon-e5-2690/bge", 2.0))
+        assert up_v100 > throughput_uplift(dn2, dc2)
+
+
+class TestTable2Jina:
+    def test_v100_xeon_2s(self):
+        dn, dc = depths_for("tesla-v100/jina", "xeon-e5-2690/jina", 2.0)
+        assert dn == 112 and dc == 30                    # 112 + 30 -> 26.7%
+        assert throughput_uplift(dn, dc) == pytest.approx(0.268, abs=0.01)
+
+    def test_faster_model_gives_bigger_uplift(self):
+        """§5.2 phenomenon 3: jina (faster) uplifts more than bge."""
+        for slo in (1.0, 2.0):
+            ub = throughput_uplift(*depths_for(
+                "tesla-v100/bge", "xeon-e5-2690/bge", slo))
+            uj = throughput_uplift(*depths_for(
+                "tesla-v100/jina", "xeon-e5-2690/jina", slo))
+            assert uj > ub
+
+
+class TestSloRelaxation:
+    def test_looser_slo_bigger_improvement(self):
+        """§5.2 phenomenon 1 (Ineq. 23): 2s uplift > 1s uplift, both combos."""
+        for npu, cpu in [("tesla-v100/bge", "xeon-e5-2690/bge"),
+                         ("atlas-300i-duo/bge", "kunpeng-920/bge")]:
+            u1 = throughput_uplift(*depths_for(npu, cpu, 1.0))
+            u2 = throughput_uplift(*depths_for(npu, cpu, 2.0))
+            assert u2 >= u1
+
+
+class TestDESEndToEnd:
+    def test_windve_vs_baseline_under_burst(self):
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        base = ServingSimulator(npu, None, 96, 0, slo_s=2.0).run_burst(130)
+        wind = ServingSimulator(npu, cpu, 96, 22, slo_s=2.0).run_burst(130)
+        assert wind.accepted > base.accepted
+        assert wind.violations == 0 and base.violations == 0
+        assert wind.rejected < base.rejected
+
+    def test_diurnal_day_more_throughput_with_offload(self):
+        from repro.core.simulator import diurnal_trace
+        npu = PAPER_DEVICES["tesla-v100/bge"]
+        cpu = PAPER_DEVICES["xeon-e5-2690/bge"]
+        trace = diurnal_trace(120, base_rate=10, peak_rate=90, seed=5)
+        base = ServingSimulator(npu, None, 96, 0, slo_s=2.0).run(list(trace))
+        wind = ServingSimulator(npu, cpu, 96, 22, slo_s=2.0).run(list(trace))
+        assert wind.accepted >= base.accepted
+        assert wind.rejected <= base.rejected
+
+
+class TestEstimatorSystem:
+    def test_estimator_close_to_finetuned_everywhere(self):
+        """Table 3 claim: regression predictions are comparable to (or better
+        than) stress tests with step 8."""
+        for key in ("tesla-v100/bge", "xeon-e5-2690/bge"):
+            p = profile_fn_for(PAPER_DEVICES[key])
+            for slo in (1.0, 2.0):
+                est, _ = estimate_depth(p, slo)
+                ft = fine_tune_depth(p, slo, start=max(est, 1), radius=16)
+                stress = stress_test_depth(p, slo, step=8)
+                assert abs(est - ft) <= max(8, 0.15 * ft)
+                assert abs(est - ft) <= abs(stress - ft) + 8

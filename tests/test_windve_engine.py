@@ -1,0 +1,90 @@
+"""End-to-end threaded WindVE engine tests (real JAX embedder on CPU)."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.queue_manager import CPU, NPU
+from repro.core.simulator import DeviceModel
+from repro.core.windve import (JaxEmbedderBackend, ModeledBackend, WindVE,
+                               calibrate_depths)
+from repro.models import embedder
+
+FAST_NPU = DeviceModel("fast-npu", beta=0.01, b=0.001, a=0.0)
+SLOW_CPU = DeviceModel("slow-cpu", beta=0.05, b=0.01, a=0.0)
+
+
+@pytest.fixture(scope="module")
+def bge_smoke():
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_offload_and_busy(bge_smoke):
+    cfg, params = bge_smoke
+    ve = WindVE(ModeledBackend(FAST_NPU, embed_dim=cfg.d_model),
+                JaxEmbedderBackend(cfg, params, max_tokens=16),
+                npu_depth=4, cpu_depth=2)
+    try:
+        futs = [ve.submit(length=8) for _ in range(8)]
+        accepted = [f for f in futs if f is not None]
+        assert len(accepted) == 6              # 4 NPU + 2 CPU
+        assert ve.stats.rejected == 2
+        res = [f.result(timeout=30) for f in accepted]
+        assert all(isinstance(r, np.ndarray) for r in res)
+        assert ve.stats.per_device[NPU] == 4
+        assert ve.stats.per_device[CPU] == 2
+    finally:
+        ve.shutdown()
+
+
+def test_real_embedder_output_is_normalized(bge_smoke):
+    cfg, params = bge_smoke
+    be = JaxEmbedderBackend(cfg, params, max_tokens=16)
+    from repro.core.queue_manager import Query
+    out = be.embed_batch([Query(qid=1, length=8), Query(qid=2, length=12)])
+    for e in out:
+        assert e.shape == (cfg.d_model,)
+        assert np.linalg.norm(e) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_single_backend_fallback():
+    ve = WindVE(None, ModeledBackend(FAST_NPU, embed_dim=8),
+                npu_depth=0, cpu_depth=3)
+    try:
+        futs = [ve.submit() for _ in range(4)]
+        assert sum(f is not None for f in futs) == 3   # sole queue depth 3
+        assert CPU not in ve.backends                  # promoted to main
+    finally:
+        ve.shutdown()
+
+
+def test_calibrate_depths_linear():
+    depths = calibrate_depths(lambda c: 0.02 * c + 0.2,
+                              lambda c: 0.1 * c + 0.4, slo_s=1.0)
+    assert depths[NPU] == 40
+    assert depths[CPU] == 6
+
+
+def test_queue_drains_and_accepts_again(bge_smoke):
+    cfg, params = bge_smoke
+    ve = WindVE(ModeledBackend(FAST_NPU, embed_dim=cfg.d_model), None,
+                npu_depth=2, cpu_depth=0)
+    try:
+        f1, f2 = ve.submit(), ve.submit()
+        assert ve.submit() is None
+        f1.result(timeout=10), f2.result(timeout=10)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            f3 = ve.submit()
+            if f3 is not None:
+                f3.result(timeout=10)
+                break
+            time.sleep(0.01)
+        else:
+            pytest.fail("queue never freed capacity")
+    finally:
+        ve.shutdown()
