@@ -8,7 +8,9 @@ import jax
 from benchmarks.common import Row, emit, time_us
 from repro.configs import get_config
 from repro.core.estimator import fit_latency
-from repro.core.queue_manager import Query, QueueManager
+from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
+                                LengthAwarePolicy, Query, QueueManager,
+                                TierSpec)
 from repro.core.windve import JaxEmbedderBackend
 from repro.models import embedder
 
@@ -16,16 +18,19 @@ from repro.models import embedder
 def run() -> list[Row]:
     rows: list[Row] = []
 
-    # Algorithm-1 dispatch cost
-    qm = QueueManager(10 ** 6, 10 ** 6)
-    i = [0]
+    # per-policy dispatch cost through the shared scheduling core
+    for policy in (CascadePolicy(), LengthAwarePolicy(), LeastLoadedPolicy()):
+        qm = QueueManager([TierSpec(NPU, 10 ** 6), TierSpec(CPU, 10 ** 6)],
+                          policy=policy)
+        i = [0]
 
-    def dispatch():
-        i[0] += 1
-        qm.dispatch(Query(qid=i[0]))
+        def dispatch():
+            i[0] += 1
+            qm.dispatch(Query(qid=i[0]))
 
-    rows.append(("engine/dispatch", time_us(dispatch, repeats=2000),
-                 "per-query Algorithm-1 routing cost"))
+        rows.append((f"engine/dispatch-{policy.name}",
+                     time_us(dispatch, repeats=2000),
+                     "per-query routing cost (cascade == Algorithm 1)"))
 
     # real embedder: measured t(C) linearity on this host CPU
     cfg = get_config("bge-large-zh-v1.5").smoke()

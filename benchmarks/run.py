@@ -17,15 +17,25 @@ MODULES = [
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 
+# jax-free, seconds-fast subset for CI: catches dispatch-semantics drift
+# between engine and simulator (the paper tables run entirely on the DES)
+SMOKE_MODULES = [
+    "benchmarks.table1_bge",
+    "benchmarks.table2_jina",
+    "benchmarks.table3_queue_depth",
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast jax-free subset (CI: paper tables 1-3)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = False
-    for modname in MODULES:
+    for modname in (SMOKE_MODULES if args.smoke else MODULES):
         if args.only and args.only not in modname:
             continue
         try:

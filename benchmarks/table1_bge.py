@@ -9,6 +9,7 @@ import dataclasses
 
 from benchmarks.common import Row, emit, finetuned_depths, time_us
 from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.routing import CPU, NPU, TierSpec
 from repro.core.simulator import PAPER_DEVICES, ServingSimulator
 
 PAPER_ROWS = {
@@ -29,8 +30,11 @@ def run() -> list[Row]:
         cpu = dataclasses.replace(PAPER_DEVICES[ck], noise_std=0.0)
 
         def burst():
-            base = ServingSimulator(npu, None, dn, 0, slo).run_burst(dn + dc + 8)
-            wind = ServingSimulator(npu, cpu, dn, dc, slo).run_burst(dn + dc + 8)
+            base = ServingSimulator(tiers=[TierSpec(NPU, dn, model=npu)],
+                                    slo_s=slo).run_burst(dn + dc + 8)
+            wind = ServingSimulator(tiers=[TierSpec(NPU, dn, model=npu),
+                                           TierSpec(CPU, dc, model=cpu)],
+                                    slo_s=slo).run_burst(dn + dc + 8)
             return base, wind
 
         us = time_us(burst, repeats=3)

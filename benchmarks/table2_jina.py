@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from benchmarks.common import Row, emit, finetuned_depths, time_us
 from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.routing import CPU, NPU, TierSpec
 from repro.core.simulator import PAPER_DEVICES, ServingSimulator
 
 PAPER_ROWS = {
@@ -18,8 +19,9 @@ def run() -> list[Row]:
     for (nk, ck, slo), (p_n, p_c, p_imp) in PAPER_ROWS.items():
         dn, dc = finetuned_depths(nk, ck, slo)
         npu, cpu = PAPER_DEVICES[nk], PAPER_DEVICES[ck]
-        us = time_us(lambda: ServingSimulator(npu, cpu, dn, dc, slo)
-                     .run_burst(dn + dc), repeats=3)
+        us = time_us(lambda: ServingSimulator(
+            tiers=[TierSpec(NPU, dn, model=npu), TierSpec(CPU, dc, model=cpu)],
+            slo_s=slo).run_burst(dn + dc), repeats=3)
         imp = throughput_uplift(dn, dc) * 100
         save = peak_saving(dn, dc) * 100
         name = f"table2/{nk.split('/')[0]}+{ck.split('/')[0]}@{slo:.0f}s"

@@ -11,6 +11,7 @@ import jax
 from repro.configs import get_config
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import estimate_depth
+from repro.core.routing import CPU, NPU, CascadePolicy, TierSpec
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import JaxEmbedderBackend, ModeledBackend, WindVE
 from repro.data.workload import make_queries
@@ -32,10 +33,14 @@ def main() -> None:
     print(f"estimator: alpha={fit.alpha:.4f} beta={fit.beta:.3f} "
           f"-> C_NPU={c_npu}")
 
-    # 4. the engine (Algorithm 1 dispatch, per-device worker threads)
-    engine = WindVE(ModeledBackend(npu_dev, embed_dim=cfg.d_model),
-                    JaxEmbedderBackend(cfg, params, max_tokens=32),
-                    npu_depth=c_npu, cpu_depth=2)
+    # 4. the engine: a TierSpec list + the paper's cascade policy
+    #    (Algorithm 1 dispatch, per-tier worker threads)
+    engine = WindVE(tiers=[
+        TierSpec(NPU, c_npu,
+                 backend=ModeledBackend(npu_dev, embed_dim=cfg.d_model)),
+        TierSpec(CPU, 2,
+                 backend=JaxEmbedderBackend(cfg, params, max_tokens=32)),
+    ], policy=CascadePolicy())
 
     # 5. a burst of queries
     queries = make_queries(c_npu + 4, cfg.vocab_size, length=24)

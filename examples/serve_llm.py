@@ -12,7 +12,7 @@ import jax
 from repro.configs import get_config
 from repro.core.adaptive import OnlineCalibrator, attach
 from repro.core.llm_backend import LMGenerateBackend
-from repro.core.queue_manager import NPU
+from repro.core.routing import CPU, NPU, TierSpec
 from repro.core.simulator import DeviceModel
 from repro.core.windve import ModeledBackend, WindVE
 from repro.data.workload import make_queries
@@ -36,9 +36,11 @@ def main() -> None:
                                max_new_tokens=args.new_tokens)
     npu_be = ModeledBackend(DeviceModel("tpu-pool", beta=0.05, b=0.01, a=0.0),
                             embed_dim=args.new_tokens)
-    engine = WindVE(npu_be, cpu_be, npu_depth=6, cpu_depth=2)
+    engine = WindVE(tiers=[TierSpec(NPU, 6, backend=npu_be),
+                           TierSpec(CPU, 2, backend=cpu_be)])
 
-    # beyond-paper: adapt depths online from live latencies
+    # beyond-paper: adapt depths online from live latencies, fed through the
+    # engine's batch-completion hook
     cal = OnlineCalibrator(slo_s=args.slo, min_points=2)
     attach(engine, cal, refit_every=4)
 

@@ -4,6 +4,9 @@ Runs the SAME burst twice — without offloading (the FlagEmbedding-style
 baseline) and with WindVE CPU offloading — and prints the concurrency and
 cost deltas (the paper's Table 1 experiment, on the real threaded engine).
 
+With ``--three-tier`` the offload run adds a second, slower CPU pool: the
+topology is just one more ``TierSpec`` in the list, no engine changes.
+
     PYTHONPATH=src python examples/serve_offload.py --queries 56
 """
 import argparse
@@ -13,19 +16,29 @@ import jax
 
 from repro.configs import get_config
 from repro.core.cost_model import peak_saving, throughput_uplift
+from repro.core.routing import CPU, NPU, TierSpec
 from repro.core.simulator import DeviceModel
 from repro.core.windve import JaxEmbedderBackend, ModeledBackend, WindVE
 from repro.data.workload import make_queries
 from repro.models import embedder
 
 
-def run_engine(heter: bool, n_queries: int, cfg, params, slo: float):
+def run_engine(heter: bool, n_queries: int, cfg, params, slo: float,
+               three_tier: bool = False):
     # a fast modeled NPU + the real (slow, 1-core) host CPU embedder
     npu = ModeledBackend(DeviceModel("npu", beta=0.05, b=0.01, a=0.0),
                          embed_dim=cfg.d_model)
-    cpu = JaxEmbedderBackend(cfg, params, max_tokens=32) if heter else None
-    engine = WindVE(npu, cpu, npu_depth=(int((slo - 0.05) / 0.01)),
-                    cpu_depth=2 if heter else 0, heter_enable=heter)
+    tiers = [TierSpec(NPU, int((slo - 0.05) / 0.01), backend=npu)]
+    if heter:
+        tiers.append(TierSpec(CPU, 2,
+                              backend=JaxEmbedderBackend(cfg, params,
+                                                         max_tokens=32)))
+    if heter and three_tier:
+        # a little-core pool: modeled 2x slower than the big-core embedder
+        little = ModeledBackend(DeviceModel("cpu-little", beta=0.1, b=0.12,
+                                            a=0.0), embed_dim=cfg.d_model)
+        tiers.append(TierSpec("CPU-little", 2, backend=little))
+    engine = WindVE(tiers=tiers)
     queries = make_queries(n_queries, cfg.vocab_size, length=24)
     t0 = time.monotonic()
     futs = [engine.submit(payload=q, length=24) for q in queries]
@@ -42,13 +55,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=56)
     ap.add_argument("--slo", type=float, default=0.5)
+    ap.add_argument("--three-tier", action="store_true",
+                    help="offload run uses NPU + big-core + little-core CPU")
     args = ap.parse_args()
 
     cfg = get_config("bge-large-zh-v1.5").smoke()
     params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
 
-    base, wall_b, c_base = run_engine(False, args.queries, cfg, params, args.slo)
-    wind, wall_w, c_wind = run_engine(True, args.queries, cfg, params, args.slo)
+    base, wall_b, c_base = run_engine(False, args.queries, cfg, params,
+                                      args.slo)
+    wind, wall_w, c_wind = run_engine(True, args.queries, cfg, params,
+                                      args.slo, three_tier=args.three_tier)
 
     print(f"baseline (no offload): C={c_base} accepted={base.accepted} "
           f"rejected={base.rejected} wall={wall_b:.2f}s")

@@ -4,7 +4,7 @@
 # affinity planner (§4.4), calibrated discrete-event simulator and the real
 # threaded serving engine.
 from repro.core import (affinity, cost_model, device_detector, estimator,
-                        queue_manager, simulator, windve)
+                        queue_manager, routing, simulator, telemetry, windve)
 
 __all__ = ["affinity", "cost_model", "device_detector", "estimator",
-           "queue_manager", "simulator", "windve"]
+           "queue_manager", "routing", "simulator", "telemetry", "windve"]

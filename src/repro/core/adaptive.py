@@ -67,30 +67,26 @@ class OnlineCalibrator:
         return max(f.max_concurrency(self.slo * self.headroom), 0), f
 
 
-def attach(engine, calibrator: OnlineCalibrator,
-           refit_every: int = 64) -> None:
+def attach(engine, calibrator: OnlineCalibrator, refit_every: int = 64):
     """Wire a calibrator into a running WindVE engine: every completed batch
     feeds an observation; every ``refit_every`` completions the depths are
-    re-estimated and applied atomically."""
+    re-estimated and applied atomically.
+
+    Uses the engine's first-class batch-completion hook (the seed
+    monkey-patched every backend's ``embed_batch``, which broke per-worker
+    model ownership and was invisible to other instrumentation).  Returns
+    the hook so callers can ``engine.remove_batch_hook(hook)`` to detach.
+    """
     done = {"n": 0}
-    orig = {}
 
-    for device, backend in engine.backends.items():
-        orig[device] = backend.embed_batch
+    def on_batch(tier: str, batch, service_latency_s: float) -> None:
+        calibrator.observe(tier, len(batch), service_latency_s)
+        done["n"] += len(batch)
+        if done["n"] >= refit_every:
+            done["n"] = 0
+            for dev, q in engine.qm.queues.items():
+                new, _ = calibrator.suggest_depth(dev, q.depth)
+                if new > 0 and new != q.depth:
+                    engine.qm.set_depth(dev, new)
 
-        def wrapped(batch, _d=device, _f=orig[device]):
-            import time as _t
-
-            t0 = _t.monotonic()
-            out = _f(batch)
-            calibrator.observe(_d, len(batch), _t.monotonic() - t0)
-            done["n"] += len(batch)
-            if done["n"] >= refit_every:
-                done["n"] = 0
-                for dev, q in engine.qm.queues.items():
-                    new, _ = calibrator.suggest_depth(dev, q.depth)
-                    if new > 0 and new != q.depth:
-                        q.depth = new
-            return out
-
-        backend.embed_batch = wrapped
+    return engine.add_batch_hook(on_batch)

@@ -1,130 +1,18 @@
-"""Queue manager — Algorithm 1 of the paper, verbatim semantics.
+"""Compat shim — the queue manager now lives in ``repro.core.routing``.
 
-Two bounded FIFO queues: the main (NPU/TPU) queue and the auxiliary (CPU)
-queue.  Dispatch policy:
-
-* main queue not full      -> enqueue on main, return "NPU"
-* else, heter enabled and
-  aux queue not full       -> enqueue on aux, return "CPU"
-* else                     -> reject, return "BUSY"
-
-Queue depths are the SLO contract: depth == the largest concurrency whose
-processing latency still meets the SLO (estimated by
-``repro.core.estimator``).  Thread-safe; the real engine (windve.py) drives
-it from a request thread while worker threads drain it.
+The seed's two-queue Algorithm 1 grew into the policy-driven N-tier
+scheduling core shared by the threaded engine, the DES and the online
+calibrator.  Everything this module used to define is re-exported so
+``from repro.core.queue_manager import QueueManager`` (and the NPU/CPU/BUSY
+constants, ``Query``, ``BoundedQueue``, ``DispatchStats``) keeps working;
+new code should import from :mod:`repro.core.routing` directly.
 """
 from __future__ import annotations
 
-import threading
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from repro.core.routing import (BUSY, CPU, NPU, BoundedQueue, CascadePolicy,
+                                DispatchPolicy, Query, QueueManager, TierSpec)
+from repro.core.telemetry import DispatchStats, Telemetry
 
-NPU = "NPU"
-CPU = "CPU"
-BUSY = "BUSY"
-
-
-@dataclass
-class Query:
-    qid: int
-    payload: Any = None          # token ids / text
-    length: int = 75             # paper default query length (tokens)
-    arrival_t: float = 0.0
-    # filled by the system:
-    device: Optional[str] = None
-    start_t: float = 0.0
-    done_t: float = 0.0
-
-    @property
-    def e2e_latency(self) -> float:
-        return self.done_t - self.arrival_t
-
-
-class BoundedQueue:
-    """FIFO with a hard depth bound == the device's C^max."""
-
-    def __init__(self, depth: int):
-        if depth < 0:
-            raise ValueError("queue depth must be >= 0")
-        self.depth = depth
-        self._q: Deque[Query] = deque()
-        self._lock = threading.Lock()
-        # paper semantics: queue length counts queued AND in-flight queries —
-        # C^max bounds *concurrency*, not just waiting items.
-        self._in_flight = 0
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._q) + self._in_flight
-
-    @property
-    def is_full(self) -> bool:
-        return len(self) >= self.depth
-
-    def push(self, q: Query) -> bool:
-        with self._lock:
-            if len(self._q) + self._in_flight >= self.depth:
-                return False
-            self._q.append(q)
-            return True
-
-    def pop_batch(self, max_batch: int) -> List[Query]:
-        """Dequeue up to max_batch queries and mark them in-flight."""
-        out: List[Query] = []
-        with self._lock:
-            while self._q and len(out) < max_batch:
-                out.append(self._q.popleft())
-            self._in_flight += len(out)
-        return out
-
-    def finish(self, n: int) -> None:
-        with self._lock:
-            self._in_flight -= n
-            assert self._in_flight >= 0
-
-
-@dataclass
-class DispatchStats:
-    to_npu: int = 0
-    to_cpu: int = 0
-    busy: int = 0
-
-    @property
-    def accepted(self) -> int:
-        return self.to_npu + self.to_cpu
-
-
-class QueueManager:
-    """Algorithm 1.  ``depths[NPU]`` / ``depths[CPU]`` are C^max_NPU/CPU."""
-
-    def __init__(self, npu_depth: int, cpu_depth: int = 0,
-                 heter_enable: bool = True):
-        self.queues: Dict[str, BoundedQueue] = {NPU: BoundedQueue(npu_depth)}
-        self.heter_enable = heter_enable and cpu_depth > 0
-        if self.heter_enable:
-            self.queues[CPU] = BoundedQueue(cpu_depth)
-        self.stats = DispatchStats()
-        self._lock = threading.Lock()
-
-    def dispatch(self, query: Query) -> str:
-        """Route one query.  Returns NPU / CPU / BUSY (Algorithm 1)."""
-        with self._lock:
-            if self.queues[NPU].push(query):
-                query.device = NPU
-                self.stats.to_npu += 1
-                return NPU
-            if self.heter_enable and self.queues[CPU].push(query):
-                query.device = CPU
-                self.stats.to_cpu += 1
-                return CPU
-            self.stats.busy += 1
-            return BUSY
-
-    def depth(self, device: str) -> int:
-        return self.queues[device].depth if device in self.queues else 0
-
-    @property
-    def max_concurrency(self) -> int:
-        """C_NPU + C_CPU — the paper's headline metric."""
-        return sum(q.depth for q in self.queues.values())
+__all__ = ["BUSY", "CPU", "NPU", "BoundedQueue", "CascadePolicy",
+           "DispatchPolicy", "DispatchStats", "Query", "QueueManager",
+           "Telemetry", "TierSpec"]

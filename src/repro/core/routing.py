@@ -1,0 +1,272 @@
+"""The scheduling core: N device tiers x pluggable dispatch policies.
+
+The paper's Algorithm 1 is a cascade over an *ordered list of device tiers*
+(main NPU queue, then the auxiliary CPU queue).  The seed hardcoded exactly
+two string-keyed queues in three divergent places (threaded engine, DES,
+calibrator monkey-patch); this module is the single implementation they all
+drive now:
+
+* ``TierSpec``       — one device pool: name, queue depth (C^max), optional
+                       engine backend / DES latency model, batch and worker
+                       limits.  A topology is just a list of these.
+* ``DispatchPolicy`` — orders the tiers a query may enter.  ``CascadePolicy``
+                       is paper-exact Algorithm 1 generalized to N tiers;
+                       ``LengthAwarePolicy`` pins long queries to the fast
+                       tier(s) (§5.4: CPU concurrency collapses with query
+                       length); ``LeastLoadedPolicy`` balances by free share.
+* ``QueueManager``   — bounded per-tier FIFOs + atomic policy dispatch +
+                       shared :class:`~repro.core.telemetry.Telemetry`.
+
+Queue depths are the SLO contract: depth == the largest concurrency whose
+processing latency still meets the SLO (estimated by
+``repro.core.estimator``).  Thread-safe; the real engine (windve.py) drives
+it from a request thread while worker threads drain it, and the DES
+(simulator.py) drives it single-threaded.
+
+The legacy two-queue constructor ``QueueManager(npu_depth, cpu_depth,
+heter_enable=...)`` still works and builds the equivalent 2-tier cascade.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.core.telemetry import Telemetry
+
+NPU = "NPU"
+CPU = "CPU"
+BUSY = "BUSY"
+
+
+@dataclass
+class Query:
+    qid: int
+    payload: Any = None          # token ids / text
+    length: int = 75             # paper default query length (tokens)
+    arrival_t: float = 0.0
+    # filled by the system:
+    device: Optional[str] = None
+    start_t: float = 0.0
+    done_t: float = 0.0
+
+    @property
+    def e2e_latency(self) -> float:
+        return self.done_t - self.arrival_t
+
+
+class BoundedQueue:
+    """FIFO with a hard depth bound == the device's C^max."""
+
+    def __init__(self, depth: int):
+        if depth < 0:
+            raise ValueError("queue depth must be >= 0")
+        self.depth = depth
+        self._q: Deque[Query] = deque()
+        self._lock = threading.Lock()
+        # paper semantics: queue length counts queued AND in-flight queries —
+        # C^max bounds *concurrency*, not just waiting items.
+        self._in_flight = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q) + self._in_flight
+
+    @property
+    def is_full(self) -> bool:
+        return len(self) >= self.depth
+
+    def push(self, q: Query) -> bool:
+        with self._lock:
+            if len(self._q) + self._in_flight >= self.depth:
+                return False
+            self._q.append(q)
+            return True
+
+    def pop_batch(self, max_batch: int) -> List[Query]:
+        """Dequeue up to max_batch queries and mark them in-flight."""
+        out: List[Query] = []
+        with self._lock:
+            while self._q and len(out) < max_batch:
+                out.append(self._q.popleft())
+            self._in_flight += len(out)
+        return out
+
+    def finish(self, n: int) -> None:
+        with self._lock:
+            self._in_flight -= n
+            assert self._in_flight >= 0
+
+
+@dataclass
+class TierSpec:
+    """One device pool in the topology, in cascade-priority order.
+
+    ``backend`` is what the threaded engine runs (``embed_batch``-capable);
+    ``model`` is what the DES samples latencies from (a ``DeviceModel``).
+    Either may be None when the spec is used by the other driver.
+    ``max_batch`` defaults to the live queue depth; ``workers`` is the number
+    of engine threads draining this tier (Algorithm 2's N instances).
+    """
+
+    name: str
+    depth: int
+    backend: Any = None
+    model: Any = None
+    max_batch: Optional[int] = None
+    workers: int = 1
+
+
+class DispatchPolicy:
+    """Orders the tiers a query may enter; first with free capacity wins.
+
+    ``QueueManager.dispatch`` holds its lock while trying the candidates in
+    order, so a policy only decides *ordering* — admission stays atomic.
+    """
+
+    name = "policy"
+
+    def candidates(self, query: Query, tiers: Sequence[TierSpec],
+                   qm: "QueueManager") -> Iterable[str]:
+        raise NotImplementedError
+
+
+class CascadePolicy(DispatchPolicy):
+    """Paper-exact Algorithm 1, generalized: overflow down the tier list."""
+
+    name = "cascade"
+
+    def candidates(self, query, tiers, qm):
+        return [t.name for t in tiers]
+
+
+class LengthAwarePolicy(DispatchPolicy):
+    """§5.4-informed: long queries only fit the fast tier(s).
+
+    Fig. 5 shows the CPU pool's additional concurrency collapsing to 0 by
+    query length 500 at the 1 s SLO — a long query offloaded to a slow tier
+    is a guaranteed SLO violation, so spend slow-tier slots on short queries
+    only and cascade long ones over the first ``fast_tiers`` entries.
+    """
+
+    name = "length-aware"
+
+    def __init__(self, long_threshold: int = 300, fast_tiers: int = 1):
+        if long_threshold <= 0:
+            raise ValueError("long_threshold must be positive")
+        if fast_tiers < 1:
+            raise ValueError("need at least one fast tier")
+        self.long_threshold = long_threshold
+        self.fast_tiers = fast_tiers
+
+    def candidates(self, query, tiers, qm):
+        if query.length >= self.long_threshold:
+            return [t.name for t in tiers[:self.fast_tiers]]
+        return [t.name for t in tiers]
+
+
+class LeastLoadedPolicy(DispatchPolicy):
+    """Route to the tier with the largest free share (ties: cascade order).
+
+    Unlike the cascade this spreads sub-peak load across tiers, trading the
+    paper's strict fast-tier priority for drain-queue headroom everywhere.
+    """
+
+    name = "least-loaded"
+
+    def candidates(self, query, tiers, qm):
+        def free_share(t: TierSpec) -> float:
+            d = qm.depth(t.name)
+            return (d - len(qm.queues[t.name])) / d if d > 0 else -1.0
+
+        order = sorted(range(len(tiers)),
+                       key=lambda i: (-free_share(tiers[i]), i))
+        return [tiers[i].name for i in order]
+
+
+class QueueManager:
+    """Policy dispatch over N bounded tier queues (Algorithm 1 core).
+
+    New-style: ``QueueManager([TierSpec(...), ...], policy=CascadePolicy())``.
+    Legacy:    ``QueueManager(npu_depth, cpu_depth, heter_enable=...)`` —
+    builds the paper's 2-tier NPU/CPU cascade.
+    """
+
+    def __init__(self, tiers: Union[int, Sequence[TierSpec], None] = None,
+                 cpu_depth: int = 0, heter_enable: bool = True, *,
+                 npu_depth: Optional[int] = None,
+                 policy: Optional[DispatchPolicy] = None,
+                 stats: Optional[Telemetry] = None):
+        if npu_depth is not None:           # legacy keyword form
+            tiers = npu_depth
+        if isinstance(tiers, int):          # legacy positional form
+            specs = [TierSpec(NPU, tiers)]
+            if heter_enable and cpu_depth > 0:
+                specs.append(TierSpec(CPU, cpu_depth))
+            tiers = specs
+        if not tiers:
+            raise ValueError("need at least one tier")
+        names = [t.name for t in tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self.tiers: List[TierSpec] = list(tiers)
+        self.policy: DispatchPolicy = policy or CascadePolicy()
+        self.queues: Dict[str, BoundedQueue] = {
+            t.name: BoundedQueue(t.depth) for t in self.tiers}
+        self.stats: Telemetry = stats if stats is not None else Telemetry()
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    @property
+    def heter_enable(self) -> bool:
+        """Legacy flag: True iff an auxiliary tier exists."""
+        return len(self.tiers) > 1
+
+    def dispatch(self, query: Query) -> str:
+        """Route one query.  Returns the admitting tier's name, or BUSY."""
+        with self._lock:
+            for name in self.policy.candidates(query, self.tiers, self):
+                if self.queues[name].push(query):
+                    query.device = name
+                    self.stats.record_dispatch(name)
+                    return name
+            self.stats.record_busy()
+            return BUSY
+
+    def tier(self, name: str) -> TierSpec:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def depth(self, device: str) -> int:
+        return self.queues[device].depth if device in self.queues else 0
+
+    def set_depth(self, device: str, depth: int) -> None:
+        """Resize a tier's SLO contract (online re-calibration)."""
+        if depth < 0:
+            raise ValueError("queue depth must be >= 0")
+        self.queues[device].depth = depth
+        self.tier(device).depth = depth
+
+    def max_batch(self, device: str) -> int:
+        """Effective batch bound: the spec's max_batch or the live depth."""
+        spec = self.tier(device)
+        return spec.max_batch if spec.max_batch else \
+            max(1, self.queues[device].depth)
+
+    def reset(self, stats: Optional[Telemetry] = None) -> Telemetry:
+        """Fresh queues (at current depths) + fresh telemetry — one DES run."""
+        with self._lock:
+            self.queues = {t.name: BoundedQueue(self.depth(t.name) if
+                                                t.name in self.queues else
+                                                t.depth)
+                           for t in self.tiers}
+            self.stats = stats if stats is not None else Telemetry()
+        return self.stats
+
+    @property
+    def max_concurrency(self) -> int:
+        """sum of C^max over tiers — the paper's headline metric."""
+        return sum(q.depth for q in self.queues.values())

@@ -12,19 +12,24 @@ what the paper itself observed: its linear-regression estimator slightly
 undershoots the fine-tuned depth (Table 3, V100: regression 40 vs fine-tuned
 44) — this simulator reproduces that emergently.
 
-The DES engine drives the real queue manager (Algorithm 1) with arrival
-traces and measures e2e latency / SLO violations / busy rate, so the
-no-offload vs CPU-offload comparison (Tables 1-2) runs end to end.
+The DES engine is the second *driver* of the shared scheduling core
+(``repro.core.routing``): it feeds arrival traces through the SAME
+``QueueManager.dispatch`` + ``DispatchPolicy`` the threaded engine uses and
+measures e2e latency / SLO violations / busy rate, so the no-offload vs
+CPU-offload comparison (Tables 1-2) runs end to end with dispatch semantics
+that cannot diverge from the real engine's.
 """
 from __future__ import annotations
 
 import heapq
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.queue_manager import BUSY, CPU, NPU, Query, QueueManager
+from repro.core.routing import (BUSY, CPU, NPU, DispatchPolicy, Query,
+                                QueueManager, TierSpec)
+from repro.core.telemetry import SimResult, Telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -120,44 +125,45 @@ def cpu_core_scaled(dev: DeviceModel, cores: int, full_cores: int = 44
 # discrete-event simulation
 # ---------------------------------------------------------------------------
 
-@dataclass
-class SimResult:
-    completed: List[Query] = field(default_factory=list)
-    rejected: int = 0
-    slo: float = 1.0
-
-    @property
-    def accepted(self) -> int:
-        return len(self.completed)
-
-    @property
-    def violations(self) -> int:
-        return sum(1 for q in self.completed if q.e2e_latency > self.slo + 1e-9)
-
-    @property
-    def max_ok_concurrency(self) -> int:
-        """Largest number of simultaneously-resident queries that all met
-        the SLO (the paper's 'maximum concurrency' metric)."""
-        ok = [q for q in self.completed if q.e2e_latency <= self.slo + 1e-9]
-        return len(ok)
-
-    def throughput(self, window_s: float) -> float:
-        return self.accepted / window_s if window_s > 0 else 0.0
-
-
 class ServingSimulator:
-    """Event-driven WindVE: Algorithm-1 dispatch + batched device service."""
+    """Event-driven WindVE: DES driver of the shared scheduling core.
 
-    def __init__(self, npu: DeviceModel, cpu: Optional[DeviceModel],
-                 npu_depth: int, cpu_depth: int, slo_s: float,
-                 query_length: int = 75, seed: int = 0):
-        self.npu_model = npu
-        self.cpu_model = cpu
-        self.qm = QueueManager(npu_depth, cpu_depth,
-                               heter_enable=cpu is not None and cpu_depth > 0)
+    New-style: ``ServingSimulator(tiers=[TierSpec(name, depth, model=...),
+    ...], slo_s=..., policy=...)`` for arbitrary topologies.  Legacy form
+    ``ServingSimulator(npu_model, cpu_model, npu_depth, cpu_depth, slo_s)``
+    builds the paper's 2-tier cascade.
+    """
+
+    def __init__(self, npu: Optional[DeviceModel] = None,
+                 cpu: Optional[DeviceModel] = None,
+                 npu_depth: int = 0, cpu_depth: int = 0, slo_s: float = 1.0,
+                 query_length: int = 75, seed: int = 0, *,
+                 tiers: Optional[Sequence[TierSpec]] = None,
+                 policy: Optional[DispatchPolicy] = None):
+        if tiers is None:
+            if npu is None:
+                raise ValueError("need an NPU model or an explicit tier list")
+            tiers = [TierSpec(NPU, npu_depth, model=npu)]
+            if cpu is not None and cpu_depth > 0:
+                tiers.append(TierSpec(CPU, cpu_depth, model=cpu))
+        tiers = list(tiers)
+        for t in tiers:
+            if t.model is None:
+                raise ValueError(f"tier {t.name!r} has no DeviceModel")
+        self.qm = QueueManager(tiers, policy=policy,
+                               stats=Telemetry(slo=slo_s))
         self.slo = slo_s
         self.length = query_length
         self.rng = random.Random(seed)
+
+    # legacy accessors (pre-TierSpec callers peeked at these)
+    @property
+    def npu_model(self) -> DeviceModel:
+        return self.qm.tiers[0].model
+
+    @property
+    def cpu_model(self) -> Optional[DeviceModel]:
+        return self.qm.tiers[1].model if len(self.qm.tiers) > 1 else None
 
     def run_burst(self, n_queries: int) -> SimResult:
         """The paper's stress scenario: n queries arrive simultaneously."""
@@ -165,15 +171,15 @@ class ServingSimulator:
 
     def run(self, arrivals: List[Tuple[float, int]]) -> SimResult:
         """arrivals: list of (time, query_length)."""
-        res = SimResult(slo=self.slo)
+        res = self.qm.reset(stats=Telemetry(slo=self.slo))
         # event key: (time, priority, seq) — device "kick"s run AFTER every
         # same-instant arrival so a burst is batched, not started one-by-one
         events: List[Tuple[float, int, int, str, object]] = []
         for i, (t, ln) in enumerate(arrivals):
             heapq.heappush(events, (t, 0, i, "arrive",
                                     Query(qid=i, length=ln, arrival_t=t)))
-        free_at = {NPU: 0.0, CPU: 0.0}
-        models = {NPU: self.npu_model, CPU: self.cpu_model}
+        free_at = {t.name: 0.0 for t in self.qm.tiers}
+        models = {t.name: t.model for t in self.qm.tiers}
         seq = len(arrivals)
 
         def nseq() -> int:
@@ -181,34 +187,32 @@ class ServingSimulator:
             seq += 1
             return seq
 
-        def try_start(dev: str, now: float):
-            if models[dev] is None or free_at[dev] > now + 1e-12:
+        def try_start(tier: str, now: float):
+            if free_at[tier] > now + 1e-12:
                 return
-            batch = self.qm.queues[dev].pop_batch(self.qm.depth(dev))
+            batch = self.qm.queues[tier].pop_batch(self.qm.max_batch(tier))
             if not batch:
                 return
-            dur = models[dev].latency(len(batch), batch[0].length, self.rng)
+            dur = models[tier].latency(len(batch), batch[0].length, self.rng)
             done = now + dur
-            free_at[dev] = done
-            heapq.heappush(events, (done, 0, nseq(), "done", (dev, batch)))
+            free_at[tier] = done
+            heapq.heappush(events, (done, 0, nseq(), "done", (tier, batch)))
 
         while events:
             now, _, _, kind, obj = heapq.heappop(events)
             if kind == "arrive":
                 verdict = self.qm.dispatch(obj)
-                if verdict == BUSY:
-                    res.rejected += 1
-                else:
+                if verdict != BUSY:
                     heapq.heappush(events, (now, 1, nseq(), "kick", verdict))
             elif kind == "kick":
                 try_start(obj, now)
             else:
-                dev, batch = obj
+                tier, batch = obj
                 for q in batch:
                     q.done_t = now
-                    res.completed.append(q)
-                self.qm.queues[dev].finish(len(batch))
-                try_start(dev, now)
+                    res.record_completion(q, tier)
+                self.qm.queues[tier].finish(len(batch))
+                try_start(tier, now)
         return res
 
 
@@ -224,17 +228,36 @@ def profile_fn_for(dev: DeviceModel, length: int = 75,
     return lambda c: dev.latency(c, length, rng if dev.noise_std else None)
 
 
+def poisson(rng: random.Random, lam: float) -> int:
+    """Poisson sample (Knuth's product method; Gaussian tail for large lam).
+
+    stdlib ``random`` has no Poisson sampler — the seed's
+    ``hasattr(rng, "poissonvariate")`` branch was dead code and every trace
+    silently fell back to a rounded Gaussian.  Knuth's method is exact for
+    the moderate rates the Fig.-2 traces use; above ``lam > 100`` the normal
+    approximation is within the model noise and avoids O(lam) sampling.
+    """
+    if lam <= 0.0:
+        return 0
+    if lam > 100.0:
+        return max(0, int(round(rng.gauss(lam, math.sqrt(lam)))))
+    L = math.exp(-lam)
+    k, p = 0, 1.0
+    while p > L:
+        k += 1
+        p *= rng.random()
+    return k - 1
+
+
 def diurnal_trace(n_seconds: int, base_rate: float, peak_rate: float,
                   length: int = 75, seed: int = 0) -> List[Tuple[float, int]]:
-    """Fig.-2-style day curve: sinusoidal rate between base and peak."""
+    """Fig.-2-style day curve: sinusoidal Poisson rate between base and peak."""
     rng = random.Random(seed)
     out: List[Tuple[float, int]] = []
     for s in range(n_seconds):
         phase = math.sin(2 * math.pi * s / max(n_seconds, 1) - math.pi / 2)
         rate = base_rate + (peak_rate - base_rate) * (phase + 1) / 2
-        n = rng.poissonvariate(rate) if hasattr(rng, "poissonvariate") else \
-            max(0, int(rng.gauss(rate, math.sqrt(max(rate, 1e-9)))))
-        for _ in range(n):
+        for _ in range(poisson(rng, rate)):
             out.append((s + rng.random(), length))
     out.sort()
     return out

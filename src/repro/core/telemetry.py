@@ -1,0 +1,109 @@
+"""Unified serving telemetry — one counter object for every driver.
+
+The seed carried three divergent stat records: ``DispatchStats`` (queue
+manager), ``EngineStats`` (threaded engine) and ``SimResult`` (DES).  They
+counted the same events with different names, so the drivers could silently
+disagree about what "accepted" meant.  ``Telemetry`` is the single record
+now: the ``QueueManager`` writes dispatch verdicts into it, the drivers
+(threads or DES) write completions into it, and every legacy accessor
+(``to_npu``, ``rejected``, ``max_ok_concurrency``, ``p(50)``, ...) reads the
+same underlying counts.
+
+``DispatchStats``/``EngineStats``/``SimResult`` remain as aliases so older
+call sites keep importing their familiar name.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - avoid circular import at runtime
+    from repro.core.routing import Query
+
+
+@dataclass
+class Telemetry:
+    """Counts for one serving run: dispatch verdicts + completions.
+
+    ``completed`` keeps the Query objects (the DES analyses them per run);
+    ``latencies`` mirrors their e2e latencies for percentile/SLO queries
+    without re-walking the list.  Long-running drivers (the threaded engine)
+    set ``keep_queries=False`` so payloads are not pinned forever — every
+    derived metric here reads ``latencies``, not ``completed``.
+    """
+
+    slo: float = 1.0
+    busy: int = 0
+    keep_queries: bool = True
+    dispatched: Dict[str, int] = field(default_factory=dict)
+    per_device: Dict[str, int] = field(default_factory=dict)
+    completed: List["Query"] = field(default_factory=list)
+    latencies: List[float] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    # -- writers (QueueManager.dispatch / the drivers) ---------------------
+    def record_dispatch(self, tier: str) -> None:
+        with self._lock:
+            self.dispatched[tier] = self.dispatched.get(tier, 0) + 1
+
+    def record_busy(self) -> None:
+        with self._lock:
+            self.busy += 1
+
+    def record_completion(self, query: "Query", tier: str) -> None:
+        """The driver sets ``query.done_t`` first; latency is derived."""
+        with self._lock:
+            if self.keep_queries:
+                self.completed.append(query)
+            self.latencies.append(query.e2e_latency)
+            self.per_device[tier] = self.per_device.get(tier, 0) + 1
+
+    # -- dispatch-side readers --------------------------------------------
+    @property
+    def accepted(self) -> int:
+        return sum(self.dispatched.values())
+
+    @property
+    def rejected(self) -> int:
+        return self.busy
+
+    @property
+    def to_npu(self) -> int:      # legacy DispatchStats field
+        return self.dispatched.get("NPU", 0)
+
+    @property
+    def to_cpu(self) -> int:      # legacy DispatchStats field
+        return self.dispatched.get("CPU", 0)
+
+    # -- completion-side readers (all derived from ``latencies`` so they
+    # work with keep_queries=False) ---------------------------------------
+    @property
+    def n_completed(self) -> int:
+        return len(self.latencies)
+
+    @property
+    def violations(self) -> int:
+        return sum(1 for l in self.latencies if l > self.slo + 1e-9)
+
+    @property
+    def max_ok_concurrency(self) -> int:
+        """Largest number of simultaneously-resident queries that all met
+        the SLO (the paper's 'maximum concurrency' metric)."""
+        return sum(1 for l in self.latencies if l <= self.slo + 1e-9)
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
+
+    def throughput(self, window_s: float) -> float:
+        return self.accepted / window_s if window_s > 0 else 0.0
+
+
+# Back-compat names: the three seed-era records are now literally the same
+# object so engine/simulator/calibrator can no longer diverge.
+DispatchStats = Telemetry
+EngineStats = Telemetry
+SimResult = Telemetry

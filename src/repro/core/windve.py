@@ -1,9 +1,15 @@
 """WindVE engine — the paper's full system (Fig. 3B), runnable for real.
 
 Pipeline: device detector -> queue depth calibration (linear-regression
-estimator) -> bounded two-tier queue manager (Algorithm 1) -> per-device
-worker threads draining their queue in batches, each worker owning its own
-model instance (the paper: "each instance employs its own model copy").
+estimator) -> policy-driven N-tier queue manager (Algorithm 1 core in
+``repro.core.routing``) -> per-tier worker threads draining their queue in
+batches, each worker owning its own model instance (the paper: "each
+instance employs its own model copy").
+
+The engine is one of two *drivers* of the shared scheduling core (the other
+is the DES in ``repro.core.simulator``): every query goes through the same
+``QueueManager.dispatch`` + ``DispatchPolicy``, so thread and simulation
+semantics cannot diverge.
 
 Backends:
 * ``JaxEmbedderBackend`` — actually runs the bge/jina-style JAX embedder on
@@ -11,21 +17,28 @@ Backends:
 * ``ModeledBackend``     — wall-clock sleeps per the calibrated DeviceModel
   (stands in for the NPU/GPU pool on this accelerator-less container; on a
   real TPU deployment this is replaced by the pjit'd embedder).
+
+Observability: ``add_batch_hook(fn)`` registers a first-class batch
+completion hook ``fn(tier_name, batch, service_latency_s)`` — the online
+calibrator (``repro.core.adaptive``) attaches through this instead of
+monkey-patching ``embed_batch``.
 """
 from __future__ import annotations
 
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import estimator
-from repro.core.device_detector import DetectionResult
-from repro.core.queue_manager import BUSY, CPU, NPU, Query, QueueManager
+from repro.core.routing import (BUSY, CPU, NPU, DispatchPolicy, Query,
+                                QueueManager, TierSpec)
 from repro.core.simulator import DeviceModel
+from repro.core.telemetry import EngineStats, Telemetry
+
+BatchHook = Callable[[str, Sequence[Query], float], None]
 
 
 class Backend:
@@ -83,27 +96,59 @@ class JaxEmbedderBackend(Backend):
         return [out[i] for i in range(B)]
 
 
-@dataclass
-class EngineStats:
-    accepted: int = 0
-    rejected: int = 0
-    completed: int = 0
-    latencies: List[float] = field(default_factory=list)
-    per_device: Dict[str, int] = field(default_factory=dict)
-
-    def p(self, q: float) -> float:
-        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
-
-
 class WindVE:
-    """The serving engine.  ``depths`` maps device -> C^max."""
+    """The serving engine: threaded driver of the shared scheduling core.
 
-    def __init__(self, npu_backend: Optional[Backend],
-                 cpu_backend: Optional[Backend],
-                 npu_depth: int, cpu_depth: int,
+    New-style: ``WindVE(tiers=[TierSpec(name, depth, backend=...), ...],
+    policy=...)`` for arbitrary topologies.  Legacy two-tier form
+    ``WindVE(npu_backend, cpu_backend, npu_depth, cpu_depth, ...)`` still
+    works and builds the paper's NPU/CPU cascade (including Algorithm 2's
+    single-device fallback when only one backend exists).
+    """
+
+    def __init__(self, npu_backend: Optional[Backend] = None,
+                 cpu_backend: Optional[Backend] = None,
+                 npu_depth: int = 0, cpu_depth: int = 0,
                  heter_enable: bool = True,
                  max_batch: Optional[Dict[str, int]] = None,
-                 workers: Optional[Dict[str, int]] = None):
+                 workers: Optional[Dict[str, int]] = None, *,
+                 tiers: Optional[Sequence[TierSpec]] = None,
+                 policy: Optional[DispatchPolicy] = None):
+        if tiers is None:
+            tiers = self._legacy_tiers(npu_backend, cpu_backend, npu_depth,
+                                       cpu_depth, heter_enable,
+                                       max_batch or {}, workers or {})
+        tiers = list(tiers)
+        if not tiers:
+            raise ValueError("need at least one tier")
+        for t in tiers:
+            if t.backend is None:
+                raise ValueError(f"tier {t.name!r} has no backend")
+        # keep_queries=False: a long-running engine must not pin every
+        # Query (and its payload) forever; all metrics read `latencies`
+        self.qm = QueueManager(tiers, policy=policy,
+                               stats=Telemetry(keep_queries=False))
+        self.stats: EngineStats = self.qm.stats   # one shared Telemetry
+        self.backends: Dict[str, Backend] = {t.name: t.backend for t in tiers}
+        self._batch_hooks: List[BatchHook] = []
+        self._futures: Dict[int, Future] = {}
+        self._qid = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._wake: Dict[str, threading.Event] = {
+            t.name: threading.Event() for t in tiers}
+        # Algorithm 2's worker counts: N instances may drain one tier's
+        # queue (each instance owns its own model copy on real hardware)
+        self._threads = [
+            threading.Thread(target=self._worker, args=(t.name,), daemon=True)
+            for t in tiers
+            for _ in range(max(1, t.workers))]
+        for t in self._threads:
+            t.start()
+
+    @staticmethod
+    def _legacy_tiers(npu_backend, cpu_backend, npu_depth, cpu_depth,
+                      heter_enable, max_batch, workers) -> List[TierSpec]:
         if npu_backend is None and cpu_backend is None:
             raise ValueError("need at least one backend")
         # single-device fallback: Algorithm 2 forces heter off and the sole
@@ -112,67 +157,66 @@ class WindVE:
             npu_backend, cpu_backend = cpu_backend, None
             npu_depth, cpu_depth = cpu_depth or npu_depth, 0
             heter_enable = False
-        self.backends: Dict[str, Backend] = {NPU: npu_backend}
-        if cpu_backend is not None and heter_enable:
-            self.backends[CPU] = cpu_backend
-        self.qm = QueueManager(npu_depth, cpu_depth if CPU in self.backends else 0,
-                               heter_enable=CPU in self.backends)
-        self.max_batch = max_batch or {}
-        self.stats = EngineStats()
-        self._futures: Dict[int, Future] = {}
-        self._qid = 0
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._wake: Dict[str, threading.Event] = {
-            d: threading.Event() for d in self.backends}
-        # Algorithm 2's worker counts: N instances may drain one device
-        # queue (each instance owns its own model copy on real hardware)
-        workers = workers or {}
-        self._threads = [
-            threading.Thread(target=self._worker, args=(d,), daemon=True)
-            for d in self.backends
-            for _ in range(max(1, workers.get(d, 1)))]
-        for t in self._threads:
-            t.start()
+        tiers = [TierSpec(NPU, npu_depth, backend=npu_backend,
+                          max_batch=max_batch.get(NPU),
+                          workers=max(1, workers.get(NPU, 1)))]
+        if cpu_backend is not None and heter_enable and cpu_depth > 0:
+            tiers.append(TierSpec(CPU, cpu_depth, backend=cpu_backend,
+                                  max_batch=max_batch.get(CPU),
+                                  workers=max(1, workers.get(CPU, 1))))
+        return tiers
 
     # ------------------------------------------------------------------
     def submit(self, payload=None, length: int = 75) -> Optional[Future]:
-        """Dispatch one query per Algorithm 1.  None == BUSY (rejected)."""
+        """Dispatch one query via the policy core.  None == BUSY (rejected).
+
+        The future is registered BEFORE dispatch: a worker may complete the
+        query before this thread returns from ``dispatch``, and must find
+        the future to resolve.  On BUSY the registration is rolled back.
+        """
         with self._lock:
             self._qid += 1
             q = Query(qid=self._qid, payload=payload, length=length,
                       arrival_t=time.monotonic())
-        verdict = self.qm.dispatch(q)
-        if verdict == BUSY:
-            self.stats.rejected += 1
-            return None
-        self.stats.accepted += 1
         fut: Future = Future()
         self._futures[q.qid] = fut
+        verdict = self.qm.dispatch(q)
+        if verdict == BUSY:
+            self._futures.pop(q.qid, None)
+            return None
         self._wake[verdict].set()
         return fut
 
-    def _worker(self, device: str) -> None:
-        backend = self.backends[device]
-        queue = self.qm.queues[device]
-        max_b = self.max_batch.get(device, queue.depth)
+    def add_batch_hook(self, hook: BatchHook) -> BatchHook:
+        """Register ``hook(tier_name, batch, service_latency_s)``, called by
+        the worker after every completed batch (calibration, metrics, ...)."""
+        self._batch_hooks.append(hook)
+        return hook
+
+    def remove_batch_hook(self, hook: BatchHook) -> None:
+        if hook in self._batch_hooks:
+            self._batch_hooks.remove(hook)
+
+    def _worker(self, tier_name: str) -> None:
+        backend = self.backends[tier_name]
+        queue = self.qm.queues[tier_name]
         while not self._stop.is_set():
-            batch = queue.pop_batch(max_b)
+            # live values: online re-calibration may resize the depth
+            batch = queue.pop_batch(self.qm.max_batch(tier_name))
             if not batch:
-                self._wake[device].wait(timeout=0.01)
-                self._wake[device].clear()
+                self._wake[tier_name].wait(timeout=0.01)
+                self._wake[tier_name].clear()
                 continue
+            t0 = time.monotonic()
             try:
                 embs = backend.embed_batch(batch)
             except Exception as e:  # pragma: no cover
                 embs = [e] * len(batch)
+            service = time.monotonic() - t0
             now = time.monotonic()
             for q, emb in zip(batch, embs):
                 q.done_t = now
-                self.stats.completed += 1
-                self.stats.latencies.append(now - q.arrival_t)
-                self.stats.per_device[device] = \
-                    self.stats.per_device.get(device, 0) + 1
+                self.stats.record_completion(q, tier_name)
                 fut = self._futures.pop(q.qid, None)
                 if fut is not None:
                     if isinstance(emb, Exception):
@@ -180,6 +224,11 @@ class WindVE:
                     else:
                         fut.set_result(emb)
             queue.finish(len(batch))
+            for hook in list(self._batch_hooks):
+                try:
+                    hook(tier_name, batch, service)
+                except Exception:  # pragma: no cover - hooks must not kill
+                    pass           # the worker loop
 
     def shutdown(self) -> None:
         self._stop.set()

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_shape,
                            shape_supported)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import api
 from repro.roofline import analysis
 from repro.steps import optim
@@ -55,7 +55,7 @@ def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     key = jax.random.PRNGKey(0)
     t0 = time.time()
-    ctx = jax.set_mesh(mesh)  # bare-PartitionSpec constraints need a context
+    ctx = mesh_context(mesh)  # bare-PartitionSpec constraints need a context
     ctx.__enter__()
 
     if shape.kind == "train":

@@ -4,21 +4,49 @@ Functions, not module-level constants — importing this module never touches
 jax device state.  The dry-run entrypoint (launch/dryrun.py) sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax
 so these meshes can be built on the CPU-only container.
+
+``jax.sharding.AxisType`` (and ``jax.make_mesh``'s ``axis_types`` kwarg)
+only exist on newer jax releases; on older installs the meshes are built
+without explicit axis types, which is the same default behaviour.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:          # older jax: no AxisType / axis_types kwarg
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:    # AxisType exists but make_mesh predates kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod (v5e); multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests / the real serving engine."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _mesh((1, 1), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Context manager enabling bare-PartitionSpec sharding constraints.
+
+    ``jax.set_mesh`` on new jax; on older releases entering the ``Mesh``
+    itself installs the equivalent resource environment.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -17,16 +17,24 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import estimate_depth
-from repro.core.queue_manager import CPU, NPU
+from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
+                                LengthAwarePolicy, TierSpec)
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import JaxEmbedderBackend, ModeledBackend, WindVE
 from repro.data.workload import make_queries
 from repro.models import embedder
 
+POLICIES = {
+    "cascade": CascadePolicy,
+    "length-aware": LengthAwarePolicy,
+    "least-loaded": LeastLoadedPolicy,
+}
+
 
 def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                  smoke: bool = True, heter: bool = True,
-                 npu_model: str = "tesla-v100/bge", seed: int = 0):
+                 npu_model: str = "tesla-v100/bge", seed: int = 0,
+                 policy: str = "cascade"):
     cfg = get_config(model)
     if smoke:
         cfg = cfg.smoke()
@@ -57,8 +65,12 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
     print(f"[serve] depths: C_NPU={d_npu} (a={fit_n.alpha:.4f} b={fit_n.beta:.3f}) "
           f"C_CPU={d_cpu}" + (f" (a={fit_c.alpha:.4f} b={fit_c.beta:.3f})"
                               if fit_c else ""))
-    engine = WindVE(npu_be, cpu_be if det.heter_enable else None,
-                    d_npu, d_cpu, heter_enable=det.heter_enable)
+    # the topology is a TierSpec list: N tiers are a config change, not a
+    # rewrite (e.g. append a little-core CPU pool here)
+    tiers = [TierSpec(NPU, d_npu, backend=npu_be)]
+    if det.heter_enable and d_cpu > 0:
+        tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be))
+    engine = WindVE(tiers=tiers, policy=POLICIES[policy]())
     return engine, cfg
 
 
@@ -70,9 +82,12 @@ def main() -> None:
     ap.add_argument("--length", type=int, default=75)
     ap.add_argument("--no-heter", action="store_true",
                     help="disable CPU offloading (the paper's baseline)")
+    ap.add_argument("--policy", default="cascade", choices=sorted(POLICIES),
+                    help="dispatch policy (cascade == paper Algorithm 1)")
     args = ap.parse_args()
 
-    engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter)
+    engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter,
+                               policy=args.policy)
     queries = make_queries(args.queries, cfg.vocab_size, args.length)
     t0 = time.monotonic()
     futs = [engine.submit(payload=q, length=args.length) for q in queries]

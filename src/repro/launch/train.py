@@ -16,7 +16,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.data.workload import TokenStream, TrainBatchSpec
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               mesh_context)
 from repro.models import api
 from repro.steps import checkpoint, optim
 from repro.steps.train import build_train_step, train_shardings
@@ -59,7 +60,7 @@ def train(arch: str, steps: int, batch: int, seq: int, smoke: bool = True,
         cfg, shape, mesh, optim.AdamWConfig(lr=lr)), donate_argnums=(0, 1))
 
     losses = []
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         t0 = time.time()
         for i in range(start, start + steps):
             batch_np = next(stream)

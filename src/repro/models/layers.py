@@ -536,15 +536,32 @@ def apply_moe(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax
     return y.reshape(B, S, D), aux
 
 
+def _mesh_axis_names():
+    """Axis names of the mesh currently in context, () if none.
+
+    ``jax.sharding.get_abstract_mesh`` on new jax; older releases stash the
+    context mesh in thread resources when a ``Mesh`` is entered.
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        am = get_am()
+        if am is None or getattr(am, "empty", True):
+            return ()
+        return tuple(am.axis_names)
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return () if m is None or m.empty else tuple(m.axis_names)
+    except Exception:  # pragma: no cover - internals moved; stay a no-op
+        return ()
+
+
 def _moe_constrain(x: jax.Array, tail_spec) -> jax.Array:
     """with_sharding_constraint(P(dp, *tail_spec)) when a mesh is in context
-    (launchers wrap lowering in jax.set_mesh); no-op otherwise."""
+    (launchers wrap lowering in a mesh context); no-op otherwise."""
     from jax.sharding import PartitionSpec as P
 
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or getattr(am, "empty", True):
-        return x
-    dp = tuple(a for a in am.axis_names if a in ("pod", "data"))
+    dp = tuple(a for a in _mesh_axis_names() if a in ("pod", "data"))
     if not dp:
         return x
     b = dp if len(dp) > 1 else dp[0]

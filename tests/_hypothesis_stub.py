@@ -1,0 +1,119 @@
+"""Minimal ``hypothesis`` fallback so property tests run without the dep.
+
+The container image has no ``hypothesis`` wheel and nothing may be pip
+installed, so four test modules used to die at collection.  This stub
+implements just the surface this repo uses — ``given`` / ``settings`` and
+the ``integers`` / ``floats`` / ``booleans`` / ``lists`` / ``tuples`` /
+``sampled_from`` / ``just`` strategies — with deterministic seeded random
+sampling (no shrinking).  When the real hypothesis is installed (CI), the
+stub is never registered.
+
+``conftest.install()`` must run before test modules import, which pytest
+guarantees for conftest-level imports.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda r: fn(self._sample(r)))
+
+    def filter(self, pred, tries: int = 100):
+        def sample(r):
+            for _ in range(tries):
+                v = self._sample(r)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for stub")
+        return _Strategy(sample)
+
+
+def integers(min_value=0, max_value=1000):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    return _Strategy(lambda r: [elements.example(r)
+                                for _ in range(r.randint(min_size, max_size))])
+
+
+def tuples(*elems):
+    return _Strategy(lambda r: tuple(e.example(r) for e in elems))
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda r: r.choice(items))
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def settings(**kwargs):
+    """Decorator form only (standalone profiles are not needed here)."""
+    def deco(fn):
+        fn._stub_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_stub_settings",
+                           getattr(fn, "_stub_settings", {}))
+            n = int(conf.get("max_examples") or 25)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(min(n, 200)):
+                pos = tuple(s.example(rng) for s in arg_strategies)
+                kws = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kws)
+        # no functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and demand fixtures named after the strategies
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_settings = getattr(fn, "_stub_settings", {})
+        return wrapper
+    return deco
+
+
+def install() -> bool:
+    """Register the stub as ``hypothesis`` if the real one is missing."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "tuples",
+                 "sampled_from", "just"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

@@ -1,8 +1,16 @@
 import os
+import sys
 
 # Smoke tests and benches must see ONE device (the dry-run sets its own 512
 # via launch/dryrun.py before importing jax — never set that globally here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property tests import hypothesis; on containers without the wheel, fall
+# back to the deterministic stub so collection (and the tests) still run.
+sys.path.insert(0, os.path.dirname(__file__))
+import _hypothesis_stub
+
+_hypothesis_stub.install()
 
 import jax
 import pytest

@@ -41,7 +41,8 @@ def test_smoke_train_step(arch, mesh):
     opt = optim.init(params)
     batch = make_batch(cfg, SHAPE, key)
     step = build_train_step(cfg, SHAPE, mesh)
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import mesh_context
+    with mesh_context(mesh):
         p2, o2, m = jax.jit(step)(params, opt, batch)
     assert jnp.isfinite(m["loss"])
     assert float(m["loss"]) > 0

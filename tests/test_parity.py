@@ -1,0 +1,160 @@
+"""Engine-vs-DES parity and engine regression tests for the shared core.
+
+Both drivers (threaded ``WindVE``, event-driven ``ServingSimulator``) route
+every query through the same ``QueueManager`` + ``DispatchPolicy`` code, so
+their dispatch decisions on the same arrival pattern must agree exactly.
+"""
+import time
+
+import pytest
+
+from repro.core.routing import (BUSY, CPU, NPU, CascadePolicy,
+                                LengthAwarePolicy, TierSpec)
+from repro.core.simulator import DeviceModel, ServingSimulator, cpu_core_scaled
+from repro.core.windve import ModeledBackend, WindVE
+
+# slow enough that a burst is fully submitted before anything completes
+# (makes the threaded engine's dispatch sequence deterministic), fast enough
+# to keep the suite quick
+NPU_DEV = DeviceModel("npu", beta=0.25, b=0.0, a=0.0)
+CPU_DEV = DeviceModel("cpu", beta=0.40, b=0.0, a=0.0)
+
+
+def burst_engine(tiers, n, policy=None, length=75):
+    ve = WindVE(tiers=tiers, policy=policy)
+    try:
+        futs = [ve.submit(length=length) for _ in range(n)]
+        for f in futs:
+            if f is not None:
+                f.result(timeout=30)
+        return dict(ve.stats.dispatched), ve.stats.rejected
+    finally:
+        ve.shutdown()
+
+
+class TestEngineDESParity:
+    def test_burst_dispatch_counts_agree(self):
+        n = 30
+        eng_tiers = [TierSpec(NPU, 8, backend=ModeledBackend(NPU_DEV, 4)),
+                     TierSpec(CPU, 4, backend=ModeledBackend(CPU_DEV, 4))]
+        sim_tiers = [TierSpec(NPU, 8, model=NPU_DEV),
+                     TierSpec(CPU, 4, model=CPU_DEV)]
+        eng_disp, eng_rej = burst_engine(eng_tiers, n)
+        sim = ServingSimulator(tiers=sim_tiers, slo_s=5.0).run_burst(n)
+        assert eng_disp == dict(sim.dispatched) == {NPU: 8, CPU: 4}
+        assert eng_rej == sim.rejected == n - 12
+
+    def test_three_tier_parity_via_tierspec_only(self):
+        """NPU + big-core CPU + little-core CPU, both drivers, config only."""
+        little = cpu_core_scaled(CPU_DEV, cores=44)
+        n = 20
+        eng_tiers = [
+            TierSpec(NPU, 6, backend=ModeledBackend(NPU_DEV, 4)),
+            TierSpec("CPU-big", 3, backend=ModeledBackend(CPU_DEV, 4)),
+            TierSpec("CPU-little", 2, backend=ModeledBackend(little, 4))]
+        sim_tiers = [TierSpec(NPU, 6, model=NPU_DEV),
+                     TierSpec("CPU-big", 3, model=CPU_DEV),
+                     TierSpec("CPU-little", 2, model=little)]
+        eng_disp, eng_rej = burst_engine(eng_tiers, n)
+        sim = ServingSimulator(tiers=sim_tiers, slo_s=10.0).run_burst(n)
+        want = {NPU: 6, "CPU-big": 3, "CPU-little": 2}
+        assert eng_disp == dict(sim.dispatched) == want
+        assert eng_rej == sim.rejected == n - 11
+        assert sim.violations == 0               # all 11 fit the 10s SLO
+
+    def test_policy_objects_are_shared_not_copied(self):
+        """One policy instance can drive both drivers simultaneously."""
+        policy = CascadePolicy()
+        sim = ServingSimulator(tiers=[TierSpec(NPU, 4, model=NPU_DEV)],
+                               slo_s=5.0, policy=policy)
+        r = sim.run_burst(6)
+        assert r.rejected == 2
+        eng_disp, eng_rej = burst_engine(
+            [TierSpec(NPU, 4, backend=ModeledBackend(NPU_DEV, 4))], 6,
+            policy=policy)
+        assert eng_disp == {NPU: 4} and eng_rej == 2
+
+    def test_length_aware_parity(self):
+        policy = LengthAwarePolicy(long_threshold=300)
+        sim_tiers = [TierSpec(NPU, 2, model=NPU_DEV),
+                     TierSpec(CPU, 4, model=CPU_DEV)]
+        sim = ServingSimulator(tiers=sim_tiers, slo_s=5.0, query_length=500,
+                               policy=policy)
+        r = sim.run_burst(5)                     # long: NPU-only, depth 2
+        assert dict(r.dispatched) == {NPU: 2} and r.rejected == 3
+        eng_tiers = [TierSpec(NPU, 2, backend=ModeledBackend(NPU_DEV, 4)),
+                     TierSpec(CPU, 4, backend=ModeledBackend(CPU_DEV, 4))]
+        eng_disp, eng_rej = burst_engine(eng_tiers, 5, policy=policy,
+                                         length=500)
+        assert eng_disp == {NPU: 2} and eng_rej == 3
+
+
+class TestFuturesRace:
+    def test_all_accepted_futures_resolve(self):
+        """Regression: the seed registered the future AFTER dispatch, so a
+        fast worker could complete the query first, pop nothing, and leave
+        the caller hanging on fut.result().  Tiny depth + near-instant
+        backend maximizes the race window."""
+        instant = DeviceModel("instant", beta=0.0, b=0.0, a=0.0)
+        ve = WindVE(tiers=[TierSpec(NPU, 1,
+                                    backend=ModeledBackend(instant, 2))])
+        try:
+            resolved = 0
+            deadline = time.monotonic() + 20
+            while resolved < 50 and time.monotonic() < deadline:
+                f = ve.submit(length=4)
+                if f is None:
+                    continue
+                f.result(timeout=5)              # hung forever in the seed
+                resolved += 1
+            assert resolved == 50
+            assert not ve._futures, "leaked futures after completion"
+        finally:
+            ve.shutdown()
+
+    def test_busy_rolls_back_registration(self):
+        slow = DeviceModel("slow", beta=0.5, b=0.0, a=0.0)
+        ve = WindVE(tiers=[TierSpec(NPU, 1,
+                                    backend=ModeledBackend(slow, 2))])
+        try:
+            f1 = ve.submit()
+            assert f1 is not None
+            assert ve.submit() is None           # BUSY
+            assert len(ve._futures) == 1         # rollback happened
+            f1.result(timeout=10)
+        finally:
+            ve.shutdown()
+
+
+class TestBatchHook:
+    def test_hook_sees_every_batch_and_detaches(self):
+        dev = DeviceModel("d", beta=0.02, b=0.0, a=0.0)
+        ve = WindVE(tiers=[TierSpec(NPU, 4, backend=ModeledBackend(dev, 2))])
+        seen = []
+        hook = ve.add_batch_hook(
+            lambda tier, batch, lat: seen.append((tier, len(batch), lat)))
+        try:
+            futs = [ve.submit() for _ in range(4)]
+            for f in futs:
+                f.result(timeout=10)
+            assert sum(n for _, n, _ in seen) == 4
+            assert all(t == NPU and lat >= 0.0 for t, _, lat in seen)
+            ve.remove_batch_hook(hook)
+            before = len(seen)
+            ve.submit().result(timeout=10)
+            time.sleep(0.05)
+            assert len(seen) == before
+        finally:
+            ve.shutdown()
+
+    def test_hook_exception_does_not_kill_worker(self):
+        dev = DeviceModel("d", beta=0.01, b=0.0, a=0.0)
+        ve = WindVE(tiers=[TierSpec(NPU, 2, backend=ModeledBackend(dev, 2))])
+        ve.add_batch_hook(lambda *a: (_ for _ in ()).throw(RuntimeError("x")))
+        try:
+            f = ve.submit()
+            assert f.result(timeout=10) is not None
+            f2 = ve.submit()                     # worker must still be alive
+            assert f2.result(timeout=10) is not None
+        finally:
+            ve.shutdown()

@@ -92,7 +92,8 @@ def test_decode_shard_map_single_device_mesh():
                           cache_dtype=jnp.float32)
     nxt = jnp.array([1, 2], dtype=jnp.int32)
     shape = ShapeConfig("t", 32, 2, "decode")
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import mesh_context
+    with mesh_context(mesh):
         step0 = build_decode_step(cfg, shape, mesh)
         t0, c0 = jax.jit(step0)(params, cache, {"token": nxt})
         perf_flags.set_flags(decode_shard_map=True)

@@ -1,0 +1,186 @@
+"""The scheduling core: TierSpec topologies, dispatch policies, telemetry."""
+import pytest
+
+from repro.core.routing import (BUSY, CPU, NPU, CascadePolicy,
+                                LeastLoadedPolicy, LengthAwarePolicy, Query,
+                                QueueManager, TierSpec)
+from repro.core.telemetry import Telemetry
+
+
+def q(i: int, length: int = 75) -> Query:
+    return Query(qid=i, length=length)
+
+
+class TestCascadeIsAlgorithm1:
+    def test_verdict_for_verdict_vs_reference(self):
+        """Scripted arrival/completion sequence: the generalized cascade must
+        reproduce the paper's Algorithm 1 decision sequence exactly."""
+        def reference_alg1(events, c_npu, c_cpu, heter):
+            # the paper's two-counter formulation (occupancy == queued +
+            # in-flight, C^max bounds concurrency)
+            occ = {"NPU": 0, "CPU": 0}
+            depths = {"NPU": c_npu, "CPU": c_cpu if heter else 0}
+            out = []
+            for kind, arg in events:
+                if kind == "finish":
+                    if occ.get(arg, 0) > 0:
+                        occ[arg] -= 1
+                    continue
+                if occ["NPU"] < depths["NPU"]:
+                    occ["NPU"] += 1
+                    out.append(NPU)
+                elif depths["CPU"] > 0 and occ["CPU"] < depths["CPU"]:
+                    occ["CPU"] += 1
+                    out.append(CPU)
+                else:
+                    out.append(BUSY)
+            return out
+
+        events = ([("arrive", i) for i in range(6)] +
+                  [("finish", "NPU"), ("arrive", 6), ("arrive", 7),
+                   ("finish", "CPU"), ("finish", "NPU"), ("arrive", 8),
+                   ("arrive", 9), ("arrive", 10)])
+        for c_npu, c_cpu, heter in [(3, 2, True), (3, 2, False), (1, 0, True),
+                                    (4, 4, True), (0, 2, True)]:
+            qm = QueueManager(c_npu, c_cpu, heter_enable=heter)
+            got = []
+            for kind, arg in events:
+                if kind == "finish":
+                    if arg in qm.queues and qm.queues[arg].pop_batch(1):
+                        qm.queues[arg].finish(1)
+                    continue
+                got.append(qm.dispatch(q(arg)))
+            assert got == reference_alg1(events, c_npu, c_cpu, heter), \
+                f"diverged for C_NPU={c_npu} C_CPU={c_cpu} heter={heter}"
+
+    def test_three_tier_overflow_ordering(self):
+        qm = QueueManager([TierSpec("NPU", 2), TierSpec("CPU-big", 2),
+                           TierSpec("CPU-little", 1)])
+        verdicts = [qm.dispatch(q(i)) for i in range(6)]
+        assert verdicts == ["NPU", "NPU", "CPU-big", "CPU-big",
+                            "CPU-little", BUSY]
+        assert qm.max_concurrency == 5
+        assert qm.stats.dispatched == {"NPU": 2, "CPU-big": 2,
+                                       "CPU-little": 1}
+
+    def test_legacy_two_arg_constructor(self):
+        qm = QueueManager(npu_depth=1, cpu_depth=1)
+        assert [qm.dispatch(q(i)) for i in range(3)] == [NPU, CPU, BUSY]
+        assert qm.heter_enable
+        assert not QueueManager(4, 0).heter_enable
+
+    def test_duplicate_tier_names_rejected(self):
+        with pytest.raises(ValueError):
+            QueueManager([TierSpec("NPU", 1), TierSpec("NPU", 2)])
+
+
+class TestLengthAwarePolicy:
+    def test_long_queries_pinned_to_fast_tier(self):
+        qm = QueueManager([TierSpec(NPU, 1), TierSpec(CPU, 4)],
+                          policy=LengthAwarePolicy(long_threshold=300))
+        assert qm.dispatch(q(1, length=500)) == NPU
+        # fast tier full: a long query is rejected, NOT offloaded (§5.4 —
+        # on the slow tier it would be a guaranteed SLO violation)
+        assert qm.dispatch(q(2, length=500)) == BUSY
+        # short queries still cascade into the slow tier
+        assert qm.dispatch(q(3, length=75)) == CPU
+
+    def test_short_queries_follow_cascade(self):
+        qm = QueueManager([TierSpec(NPU, 1), TierSpec(CPU, 1)],
+                          policy=LengthAwarePolicy(long_threshold=300))
+        assert [qm.dispatch(q(i, length=75)) for i in range(3)] == \
+            [NPU, CPU, BUSY]
+
+    def test_fast_tiers_window(self):
+        qm = QueueManager([TierSpec("NPU", 1), TierSpec("CPU-big", 1),
+                           TierSpec("CPU-little", 8)],
+                          policy=LengthAwarePolicy(long_threshold=200,
+                                                   fast_tiers=2))
+        assert qm.dispatch(q(1, length=400)) == "NPU"
+        assert qm.dispatch(q(2, length=400)) == "CPU-big"
+        assert qm.dispatch(q(3, length=400)) == BUSY
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            LengthAwarePolicy(long_threshold=0)
+        with pytest.raises(ValueError):
+            LengthAwarePolicy(fast_tiers=0)
+
+
+class TestLeastLoadedPolicy:
+    def test_balances_by_free_share(self):
+        qm = QueueManager([TierSpec("A", 4), TierSpec("B", 2)],
+                          policy=LeastLoadedPolicy())
+        # free shares: A 4/4 vs B 2/2 -> tie, cascade order -> A
+        assert qm.dispatch(q(1)) == "A"
+        # A 3/4 vs B 2/2 -> B
+        assert qm.dispatch(q(2)) == "B"
+        # A 3/4 vs B 1/2 -> A
+        assert qm.dispatch(q(3)) == "A"
+
+    def test_fills_everything_then_busy(self):
+        qm = QueueManager([TierSpec("A", 2), TierSpec("B", 2)],
+                          policy=LeastLoadedPolicy())
+        verdicts = [qm.dispatch(q(i)) for i in range(5)]
+        assert verdicts.count("A") == 2 and verdicts.count("B") == 2
+        assert verdicts[-1] == BUSY
+
+
+class TestDepthManagement:
+    def test_set_depth_resizes_contract(self):
+        qm = QueueManager([TierSpec(NPU, 2)])
+        qm.dispatch(q(1)), qm.dispatch(q(2))
+        assert qm.dispatch(q(3)) == BUSY
+        qm.set_depth(NPU, 4)
+        assert qm.dispatch(q(4)) == NPU
+        assert qm.tier(NPU).depth == 4          # spec stays in sync
+        with pytest.raises(ValueError):
+            qm.set_depth(NPU, -1)
+
+    def test_max_batch_tracks_live_depth(self):
+        qm = QueueManager([TierSpec(NPU, 8)])
+        assert qm.max_batch(NPU) == 8
+        qm.set_depth(NPU, 3)
+        assert qm.max_batch(NPU) == 3
+        qm2 = QueueManager([TierSpec(NPU, 8, max_batch=2)])
+        assert qm2.max_batch(NPU) == 2
+
+    def test_reset_keeps_depths_fresh_stats(self):
+        qm = QueueManager([TierSpec(NPU, 2)])
+        qm.set_depth(NPU, 5)
+        qm.dispatch(q(1))
+        stats = qm.reset()
+        assert qm.depth(NPU) == 5
+        assert len(qm.queues[NPU]) == 0
+        assert stats.accepted == 0 and qm.stats is stats
+
+
+class TestTelemetryUnification:
+    def test_legacy_dispatch_counters(self):
+        qm = QueueManager(2, 1)
+        for i in range(4):
+            qm.dispatch(q(i))
+        s = qm.stats
+        assert (s.to_npu, s.to_cpu, s.busy) == (2, 1, 1)
+        assert s.accepted == 3 and s.rejected == 1
+
+    def test_completion_counters_and_slo(self):
+        t = Telemetry(slo=1.0)
+        fast = Query(qid=1, arrival_t=0.0, done_t=0.5)
+        slow = Query(qid=2, arrival_t=0.0, done_t=2.0)
+        t.record_completion(fast, NPU)
+        t.record_completion(slow, CPU)
+        assert t.n_completed == 2
+        assert t.violations == 1
+        assert t.max_ok_concurrency == 1
+        assert t.per_device == {NPU: 1, CPU: 1}
+        assert t.p(50) == pytest.approx(1.25)
+        assert t.throughput(2.0) == 0.0          # nothing dispatched yet
+
+    def test_engine_sim_dispatch_records_are_one_object(self):
+        """DispatchStats / EngineStats / SimResult are literally Telemetry."""
+        from repro.core.queue_manager import DispatchStats
+        from repro.core.telemetry import EngineStats, SimResult
+        assert DispatchStats is Telemetry
+        assert EngineStats is Telemetry
+        assert SimResult is Telemetry
