@@ -44,7 +44,11 @@ def run() -> list[Row]:
         be.embed_batch(batch)
         return _t.monotonic() - t0
 
+    # JIT warm-up: compile every batch shape ONCE before timing, otherwise
+    # the c's first sample is trace+compile time and the Eq. 12 fit is junk
     cs = [1, 2, 4, 8, 16]
+    for c in cs:
+        batch_lat(c)
     lats = [min(batch_lat(c) for _ in range(3)) for c in cs]
     fit = fit_latency(cs, lats)
     rows.append(("engine/jax-embedder-batch16", lats[-1] / 16 * 1e6,

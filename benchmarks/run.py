@@ -14,15 +14,19 @@ MODULES = [
     "benchmarks.fig5_query_length",  # Fig. 5: query-length scalability
     "benchmarks.fig6_cpu_cores",    # Fig. 6: CPU-core scalability
     "benchmarks.engine_microbench",  # real engine on this host
+    "benchmarks.bucketing_microbench",  # shape bucketing vs fixed padding
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 
-# jax-free, seconds-fast subset for CI: catches dispatch-semantics drift
-# between engine and simulator (the paper tables run entirely on the DES)
+# fast subset for CI: tables 1-3 catch dispatch-semantics drift between
+# engine and simulator (they run entirely on the DES); the bucketing
+# microbench self-asserts its padded-waste / recompile / equality floors so
+# hot-path padding regressions fail the build
 SMOKE_MODULES = [
     "benchmarks.table1_bge",
     "benchmarks.table2_jina",
     "benchmarks.table3_queue_depth",
+    "benchmarks.bucketing_microbench",
 ]
 
 

@@ -31,7 +31,8 @@ from __future__ import annotations
 import threading
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, Iterable, List, Optional, Sequence, Union
+from typing import (Any, Callable, Deque, Dict, Iterable, List, Optional,
+                    Sequence, Union)
 
 from repro.core.telemetry import Telemetry
 
@@ -84,12 +85,32 @@ class BoundedQueue:
             self._q.append(q)
             return True
 
-    def pop_batch(self, max_batch: int) -> List[Query]:
-        """Dequeue up to max_batch queries and mark them in-flight."""
+    def pop_batch(self, max_batch: int,
+                  bucket_fn: Optional[Callable[[Query], Any]] = None
+                  ) -> List[Query]:
+        """Dequeue up to max_batch queries and mark them in-flight.
+
+        With a ``bucket_fn`` the batch is *length-aware*: the oldest queued
+        query picks the bucket (strict FIFO decides who is served next), then
+        only queries in that same bucket join the batch — so one execution
+        pads to the bucket's shape, not to the longest straggler.  Queries in
+        other buckets keep their arrival order and wait for a later pop.
+        """
         out: List[Query] = []
         with self._lock:
-            while self._q and len(out) < max_batch:
-                out.append(self._q.popleft())
+            if bucket_fn is None:
+                while self._q and len(out) < max_batch:
+                    out.append(self._q.popleft())
+            elif self._q:
+                key = bucket_fn(self._q[0])
+                rest: Deque[Query] = deque()
+                while self._q:
+                    q = self._q.popleft()
+                    if len(out) < max_batch and bucket_fn(q) == key:
+                        out.append(q)
+                    else:
+                        rest.append(q)
+                self._q = rest
             self._in_flight += len(out)
         return out
 
@@ -108,6 +129,13 @@ class TierSpec:
     Either may be None when the spec is used by the other driver.
     ``max_batch`` defaults to the live queue depth; ``workers`` is the number
     of engine threads draining this tier (Algorithm 2's N instances).
+
+    ``bucket_fn`` (optional, ``Query -> hashable``) makes this tier drain its
+    queue in length buckets: each popped batch contains only queries whose
+    bucket matches the oldest waiting query's (see
+    ``BoundedQueue.pop_batch``).  Pair it with a shape-bucketed backend
+    (``repro.core.bucketing``) so intra-batch padding collapses to the
+    bucket boundary.
     """
 
     name: str
@@ -116,6 +144,7 @@ class TierSpec:
     model: Any = None
     max_batch: Optional[int] = None
     workers: int = 1
+    bucket_fn: Optional[Callable[[Query], Any]] = None
 
 
 class DispatchPolicy:
@@ -255,6 +284,15 @@ class QueueManager:
         spec = self.tier(device)
         return spec.max_batch if spec.max_batch else \
             max(1, self.queues[device].depth)
+
+    def pop_batch(self, device: str) -> List[Query]:
+        """Drain one batch from a tier, honouring its ``bucket_fn``.
+
+        Both drivers (threaded engine, DES) form batches through this single
+        entry point so batch composition cannot diverge between them.
+        """
+        return self.queues[device].pop_batch(self.max_batch(device),
+                                             self.tier(device).bucket_fn)
 
     def reset(self, stats: Optional[Telemetry] = None) -> Telemetry:
         """Fresh queues (at current depths) + fresh telemetry — one DES run."""

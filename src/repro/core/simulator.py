@@ -190,10 +190,14 @@ class ServingSimulator:
         def try_start(tier: str, now: float):
             if free_at[tier] > now + 1e-12:
                 return
-            batch = self.qm.queues[tier].pop_batch(self.qm.max_batch(tier))
+            # qm.pop_batch: same batch-formation code as the threaded engine
+            # (bucket_fn-aware); latency follows the LONGEST query — the
+            # batch is one padded execution, not batch[0]'s length
+            batch = self.qm.pop_batch(tier)
             if not batch:
                 return
-            dur = models[tier].latency(len(batch), batch[0].length, self.rng)
+            dur = models[tier].latency(len(batch),
+                                       max(q.length for q in batch), self.rng)
             done = now + dur
             free_at[tier] = done
             heapq.heappush(events, (done, 0, nseq(), "done", (tier, batch)))

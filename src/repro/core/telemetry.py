@@ -38,6 +38,7 @@ class Telemetry:
     slo: float = 1.0
     busy: int = 0
     keep_queries: bool = True
+    truncated: int = 0
     dispatched: Dict[str, int] = field(default_factory=dict)
     per_device: Dict[str, int] = field(default_factory=dict)
     completed: List["Query"] = field(default_factory=list)
@@ -53,6 +54,14 @@ class Telemetry:
     def record_busy(self) -> None:
         with self._lock:
             self.busy += 1
+
+    def record_truncations(self, n: int) -> None:
+        """Queries whose payload was cut to the backend's max_tokens: the
+        served embedding silently covers a prefix of the document, which is
+        a quality bug, not a latency one — count it so operators see it."""
+        if n:
+            with self._lock:
+                self.truncated += n
 
     def record_completion(self, query: "Query", tier: str) -> None:
         """The driver sets ``query.done_t`` first; latency is derived."""
@@ -100,6 +109,22 @@ class Telemetry:
 
     def throughput(self, window_s: float) -> float:
         return self.accepted / window_s if window_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        """One flat record of the run: dispatch verdicts, completions, SLO
+        compliance and payload-truncation count (quality loss is surfaced
+        next to latency, not hidden in a backend counter)."""
+        return {
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "completed": self.n_completed,
+            "violations": self.violations,
+            "truncated": self.truncated,
+            "p50_s": self.p(50),
+            "p99_s": self.p(99),
+            **{f"dispatched_{k}": v for k, v in sorted(self.dispatched.items())},
+            **{f"completed_{k}": v for k, v in sorted(self.per_device.items())},
+        }
 
 
 # Back-compat names: the three seed-era records are now literally the same

@@ -42,9 +42,15 @@ BatchHook = Callable[[str, Sequence[Query], float], None]
 
 
 class Backend:
-    """A device pool able to embed a batch of queries."""
+    """A device pool able to embed a batch of queries.
+
+    ``telemetry`` (optional): a :class:`~repro.core.telemetry.Telemetry` the
+    backend reports quality events (payload truncations) into.  ``WindVE``
+    wires its shared stats object into any backend that left it None.
+    """
 
     name = "backend"
+    telemetry: Optional[Telemetry] = None
 
     def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
         raise NotImplementedError
@@ -57,15 +63,27 @@ class ModeledBackend(Backend):
         self.name = model.name
 
     def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
-        dur = self.model.latency(len(queries), queries[0].length)
+        # the batch is served as ONE padded execution, so its latency follows
+        # the longest member — using queries[0] made the modeled tier blind
+        # to length-aware batch formation
+        dur = self.model.latency(len(queries),
+                                 max(q.length for q in queries))
         time.sleep(dur)
         return [np.zeros(self.embed_dim, np.float32) for _ in queries]
 
 
 class JaxEmbedderBackend(Backend):
-    """Real JAX embedder running on the host CPU."""
+    """Real JAX embedder running on the host CPU.
 
-    def __init__(self, cfg, params, max_tokens: int = 128):
+    Every batch is padded to the fixed ``max_tokens`` window, and every new
+    *batch size* triggers a fresh jit trace (``traces`` counts them) — the
+    baseline the shape-bucketed backend (``repro.core.bucketing``) beats.
+    Payloads longer than ``max_tokens`` are truncated; truncations are
+    counted locally and into ``telemetry`` when attached.
+    """
+
+    def __init__(self, cfg, params, max_tokens: int = 128,
+                 telemetry: Optional[Telemetry] = None):
         import jax
         import jax.numpy as jnp
 
@@ -74,26 +92,65 @@ class JaxEmbedderBackend(Backend):
         self.cfg = cfg
         self.params = params
         self.max_tokens = max_tokens
+        self.telemetry = telemetry
         self.name = f"jax-cpu/{cfg.name}"
-        self._embed = jax.jit(
-            lambda p, toks, mask: embedder.embed(p, cfg, toks, mask))
+        self.traces = 0          # jit retraces (one per new padded shape)
+        self.truncated = 0
+        self.real_tokens = 0     # tokens the queries actually carried
+        self.padded_tokens = 0   # tokens added by padding (wasted FLOPs)
+
+        def _fn(p, toks, mask):
+            self.traces += 1          # python side effect: runs once per trace
+            return embedder.embed(p, cfg, toks, mask)
+
+        self._embed = jax.jit(_fn)
         self._jnp = jnp
 
-    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
-        jnp = self._jnp
+    def _tokenize(self, queries: Sequence[Query], seq_len: int):
+        """Pad/truncate a batch into (tokens, mask) of width ``seq_len``.
+
+        Returns (toks, mask, real_tokens, truncated).  Queries without a
+        payload get the deterministic synthetic token stream, so modeled and
+        real runs embed identical inputs.
+        """
         B = len(queries)
-        toks = np.zeros((B, self.max_tokens), np.int32)
-        mask = np.zeros((B, self.max_tokens), np.float32)
+        toks = np.zeros((B, seq_len), np.int32)
+        mask = np.zeros((B, seq_len), np.float32)
+        real = 0
+        truncated = 0
         for i, q in enumerate(queries):
             ids = q.payload
             if ids is None:
                 ids = (np.arange(q.length) % (self.cfg.vocab_size - 1)) + 1
-            n = min(len(ids), self.max_tokens)
+            if len(ids) > seq_len:
+                truncated += 1
+            n = min(len(ids), seq_len)
             toks[i, :n] = np.asarray(ids[:n], np.int32)
             mask[i, :n] = 1.0
+            real += n
+        return toks, mask, real, truncated
+
+    def _record_truncations(self, n: int) -> None:
+        if n:
+            self.truncated += n
+            if self.telemetry is not None:
+                self.telemetry.record_truncations(n)
+
+    @property
+    def padded_waste(self) -> float:
+        """Fraction of embedded tokens that were padding."""
+        total = self.real_tokens + self.padded_tokens
+        return self.padded_tokens / total if total else 0.0
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        jnp = self._jnp
+        toks, mask, real, truncated = self._tokenize(queries, self.max_tokens)
+        self._record_truncations(truncated)
+        self.real_tokens += real
+        self.padded_tokens += len(queries) * self.max_tokens - real
         out = np.asarray(self._embed(self.params, jnp.asarray(toks),
                                      jnp.asarray(mask)))
-        return [out[i] for i in range(B)]
+        return [out[i] for i in range(len(queries))]
 
 
 class WindVE:
@@ -130,6 +187,11 @@ class WindVE:
                                stats=Telemetry(keep_queries=False))
         self.stats: EngineStats = self.qm.stats   # one shared Telemetry
         self.backends: Dict[str, Backend] = {t.name: t.backend for t in tiers}
+        for be in self.backends.values():
+            # backends report quality events (truncations) into the engine's
+            # shared telemetry unless the caller wired their own
+            if getattr(be, "telemetry", False) is None:
+                be.telemetry = self.stats
         self._batch_hooks: List[BatchHook] = []
         self._futures: Dict[int, Future] = {}
         self._qid = 0
@@ -201,8 +263,9 @@ class WindVE:
         backend = self.backends[tier_name]
         queue = self.qm.queues[tier_name]
         while not self._stop.is_set():
-            # live values: online re-calibration may resize the depth
-            batch = queue.pop_batch(self.qm.max_batch(tier_name))
+            # live values: online re-calibration may resize the depth;
+            # qm.pop_batch honours the tier's bucket_fn (length-aware batches)
+            batch = self.qm.pop_batch(tier_name)
             if not batch:
                 self._wake[tier_name].wait(timeout=0.01)
                 self._wake[tier_name].clear()

@@ -1,9 +1,12 @@
 # Pallas TPU kernels for the compute hot-spots (DESIGN.md §6), each with an
 # ops.py jit wrapper (backend dispatch) and a ref.py pure-jnp oracle:
-#   flash_attention/ — blockwise online-softmax attention (GQA, SWA)
+#   flash_attention/ — blockwise online-softmax attention (GQA, SWA, ragged)
 #   flash_decode/    — single-token decode attention vs a long KV cache
 #   ssm_scan/        — mamba-1 selective scan, chunked, state in VMEM
 #   rmsnorm/         — fused residual-stream normalisation
-from repro.kernels import flash_attention, flash_decode, rmsnorm, ssm_scan
+#   pool_norm/       — fused masked-pool + L2-normalize embedder epilogue
+from repro.kernels import (flash_attention, flash_decode, pool_norm, rmsnorm,
+                           ssm_scan)
 
-__all__ = ["flash_attention", "flash_decode", "ssm_scan", "rmsnorm"]
+__all__ = ["flash_attention", "flash_decode", "ssm_scan", "rmsnorm",
+           "pool_norm"]

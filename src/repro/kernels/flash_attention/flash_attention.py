@@ -26,9 +26,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
-                  scale: float, causal: bool, window: int,
-                  sq: int, sk: int, block_q: int, block_k: int, nk: int):
+def _flash_kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, acc_ref, m_ref, d_ref,
+                  *, scale: float, causal: bool, window: int,
+                  sq: int, block_q: int, block_k: int, nk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -45,7 +45,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
 
     qp = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     kp = ki * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    valid = (qp < sq) & (kp < sk)
+    # per-example valid-key prefix (ragged batches: bucketed embedder pads
+    # each row to the bucket; padded keys must not enter the softmax)
+    valid = (qp < sq) & (kp < kvl_ref[0, 0])
     if causal:
         valid &= kp <= qp
     if window:
@@ -72,11 +74,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int = 0,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           kv_len: jax.Array | None = None) -> jax.Array:
     """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
 
-    On this container the kernel body executes via interpret=True (CPU);
-    on TPU pass interpret=False for the compiled MXU path."""
+    ``kv_len`` (optional, (B,) int32): per-example count of valid keys —
+    keys at positions >= kv_len[b] are masked out (ragged/bucketed batches
+    where each row is left-aligned and padded to the bucket).  Defaults to
+    all Sk keys valid.  On this container the kernel body executes via
+    interpret=True (CPU); on TPU pass interpret=False for the compiled MXU
+    path."""
     B, H, Sq, hd = q.shape
     KV, Sk = k.shape[1], k.shape[2]
     assert H % KV == 0, "num_heads must be a multiple of num_kv_heads"
@@ -90,10 +97,16 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if pk:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    if kv_len is None:
+        kv_len = jnp.full((B,), Sk, jnp.int32)
+    # (B, 1) scalar-per-block in SMEM: one bound per batch row
+    kvl = jnp.minimum(kv_len.astype(jnp.int32), Sk).reshape(B, 1)
 
+    # the per-example kvl bound (clamped to the unpadded Sk) also masks the
+    # block-padding key tail, so no separate `kp < Sk` guard is needed
     kernel = functools.partial(
         _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
-        window=window, sq=Sq, sk=Sk, block_q=bq, block_k=bk, nk=nk)
+        window=window, sq=Sq, block_q=bq, block_k=bk, nk=nk)
 
     out = pl.pallas_call(
         kernel,
@@ -105,6 +118,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          lambda b, h, qi, ki: (b, h // G, ki, 0)),
             pl.BlockSpec((1, 1, bk, hd),
                          lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, qi, ki: (b, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd),
                                lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -115,5 +130,5 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq,), jnp.float32),      # running denominator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, kvl)
     return out[:, :, :Sq]

@@ -19,26 +19,32 @@ from repro.kernels.flash_attention.ref import attention_ref
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     backend: str = "auto", block_q: int = 128,
-                    block_k: int = 128):
-    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+                    block_k: int = 128, kv_len=None):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
+
+    ``kv_len`` (optional, (B,) int32): per-example valid-key prefix — the
+    ragged-batch masking the bucketed embedder needs."""
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "pallas":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       block_q=block_q, block_k=block_k,
-                                      interpret=False)
+                                      interpret=False, kv_len=kv_len)
     if backend == "interpret":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       block_q=block_q, block_k=block_k,
-                                      interpret=True)
+                                      interpret=True, kv_len=kv_len)
     from repro.models.layers import flash_attention_jnp
 
     B, H, Sq, hd = q.shape
     Sk = k.shape[2]
+    kv_mask = None
+    if kv_len is not None:
+        kv_mask = jnp.arange(Sk, dtype=jnp.int32)[None, :] < kv_len[:, None]
     out = flash_attention_jnp(
         jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
         jnp.arange(Sq, dtype=jnp.int32), jnp.arange(Sk, dtype=jnp.int32),
-        causal=causal, window=window)
+        causal=causal, window=window, kv_mask=kv_mask)
     return jnp.moveaxis(out, 2, 1)
 
 

@@ -14,9 +14,10 @@ import jax.numpy as jnp
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                   causal: bool = True, window: int = 0,
-                  sq_valid: int | None = None, sk_valid: int | None = None
-                  ) -> jax.Array:
+                  sq_valid: int | None = None, sk_valid: int | None = None,
+                  kv_len: jax.Array | None = None) -> jax.Array:
     """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd).  GQA via H = KV * G.
+    ``kv_len`` (optional, (B,)): per-example valid-key prefix length.
     Returns (B, H, Sq, hd) fp32-accurate attention output."""
     B, H, Sq, hd = q.shape
     KV, Sk = k.shape[1], k.shape[2]
@@ -37,6 +38,9 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     if window:
         valid &= kp > qp - window
     s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    if kv_len is not None:
+        kvalid = jnp.arange(Sk)[None, :] < kv_len[:, None]          # (B, Sk)
+        s = jnp.where(kvalid[:, None, None, None, :], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)
     out = jnp.einsum("bkgqs,bksh->bkgqh", w, vf)

@@ -1,0 +1,4 @@
+from repro.kernels.pool_norm.ops import (pool_norm, pool_norm_pallas,
+                                         pool_norm_ref)
+
+__all__ = ["pool_norm", "pool_norm_pallas", "pool_norm_ref"]

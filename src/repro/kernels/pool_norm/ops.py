@@ -1,0 +1,27 @@
+"""Backend-dispatching jit wrapper for fused masked-pool + L2-normalize."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.pool_norm.pool_norm import pool_norm_pallas
+from repro.kernels.pool_norm.ref import pool_norm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "backend", "block_b"))
+def pool_norm(h, mask, pool: str = "mean", *, backend: str = "auto",
+              block_b: int = 8):
+    """h: (B, S, D); mask: (B, S) -> (B, D) float32 unit vectors."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return pool_norm_pallas(h, mask, pool, block_b=block_b,
+                                interpret=False)
+    if backend == "interpret":
+        return pool_norm_pallas(h, mask, pool, block_b=block_b,
+                                interpret=True)
+    return pool_norm_ref(h, mask, pool)
+
+
+__all__ = ["pool_norm", "pool_norm_pallas", "pool_norm_ref"]

@@ -1,0 +1,56 @@
+"""Fused masked-pool + L2-normalize Pallas TPU kernel.
+
+The embedder's serving epilogue: mask-weighted pooling over the sequence
+axis and L2 normalisation of the pooled vector, in ONE pass over a
+(block_b, S, D) VMEM tile.  Unfused XLA lowers this tail as separate
+multiply / reduce / norm / divide HBM round-trips over the (B, S, D)
+hidden-state tensor; fused it is one read of the hiddens + one (B, D)
+write.  Pooling and the norm both accumulate in fp32 regardless of the
+compute dtype (the paper serves fp32 embedding vectors).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_norm_kernel(h_ref, m_ref, o_ref, *, pool: str):
+    h = h_ref[...].astype(jnp.float32)           # (bb, S, D)
+    m = m_ref[...].astype(jnp.float32)           # (bb, S)
+    if pool == "mean":
+        pooled = (h * m[..., None]).sum(1) / jnp.maximum(
+            m.sum(1, keepdims=True), 1.0)
+    else:  # cls — zeroed for fully-masked (padding) rows, like the ref
+        pooled = h[:, 0] * jnp.minimum(m[:, :1], 1.0)
+    nrm = jnp.sqrt(jnp.sum(pooled * pooled, axis=-1, keepdims=True))
+    o_ref[...] = pooled / jnp.maximum(nrm, 1e-9)
+
+
+def pool_norm_pallas(h: jax.Array, mask: jax.Array, pool: str = "mean", *,
+                     block_b: int = 8, interpret: bool = True) -> jax.Array:
+    """h: (B, S, D); mask: (B, S) -> (B, D) float32, L2-normalised."""
+    if pool not in ("mean", "cls"):
+        raise ValueError(f"unknown pool mode {pool!r}")
+    B, S, D = h.shape
+    bb = min(block_b, B)
+    nb = -(-B // bb)
+    pad = nb * bb - B
+    if pad:
+        # padding rows carry an all-zero mask -> they pool to zero vectors
+        h = jnp.pad(h, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_pool_norm_kernel, pool=pool),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, S, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, S), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bb, D), jnp.float32),
+        interpret=interpret,
+    )(h, mask)
+    return out[:B]

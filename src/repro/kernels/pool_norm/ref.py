@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused masked-pool + L2-normalize epilogue."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool_norm_ref(h: jax.Array, mask: jax.Array,
+                  pool: str = "mean") -> jax.Array:
+    """h: (B, S, D) hidden states; mask: (B, S) 1 = real token.
+
+    pool: "mean" (jina-style masked mean) or "cls" (bge-style first token).
+    Returns (B, D) float32 L2-normalised embeddings; a fully-masked row
+    (a bucketed batch's padding row) pools to the zero vector.
+    """
+    hf = h.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    if pool == "mean":
+        pooled = (hf * m[..., None]).sum(1) / jnp.maximum(
+            m.sum(1, keepdims=True), 1.0)
+    elif pool == "cls":
+        pooled = hf[:, 0] * jnp.minimum(m[:, :1], 1.0)
+    else:
+        raise ValueError(f"unknown pool mode {pool!r}")
+    return pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.kernels.pool_norm import pool_norm
 from repro.models import layers as L
 
 Params = Dict[str, Any]
@@ -42,15 +43,26 @@ def init_embedder(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
           mask: jax.Array | None = None) -> jax.Array:
     """tokens: (B, S) int32; mask: (B, S) 1=real token.  Returns (B, embed_dim)
-    L2-normalised embeddings (the paper's 1024-d fp32 output vector)."""
+    L2-normalised embeddings (the paper's 1024-d fp32 output vector).
+
+    The mask is honoured END TO END: padded positions are excluded from every
+    attention softmax (``kv_mask``), not just from pooling, so an embedding
+    is invariant to how far its batch was padded — the property that lets
+    the shape-bucketed backend (``repro.core.bucketing``) pad to the bucket
+    instead of the global max and still serve identical vectors.  The
+    pooling + L2-normalise epilogue runs through the fused
+    ``repro.kernels.pool_norm`` op (Pallas kernel on TPU, jnp oracle here).
+    """
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     h = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
     h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    kv_mask = mask          # None -> every position is a real token
 
     def body(h, bp):
         hin = L.apply_norm(bp["norm1"], cfg, h)
-        h = h + L.attn_forward(bp["attn"], cfg, hin, positions, causal=False)
+        h = h + L.attn_forward(bp["attn"], cfg, hin, positions, causal=False,
+                               kv_mask=kv_mask)
         hin = L.apply_norm(bp["norm2"], cfg, h)
         h = h + L.apply_mlp(bp["ffn"], cfg, hin)
         return h, None
@@ -59,12 +71,5 @@ def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
     h = L.apply_norm(params["final_norm"], cfg, h)
 
     if mask is None:
-        mask = jnp.ones((B, S), h.dtype)
-    mask = mask.astype(h.dtype)
-    if cfg.pool == "mean":
-        pooled = (h * mask[..., None]).sum(1) / jnp.maximum(
-            mask.sum(1, keepdims=True), 1.0)
-    else:  # cls
-        pooled = h[:, 0]
-    pooled = pooled.astype(jnp.float32)
-    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+        mask = jnp.ones((B, S), jnp.float32)
+    return pool_norm(h, mask, pool="mean" if cfg.pool == "mean" else "cls")

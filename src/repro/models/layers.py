@@ -134,10 +134,15 @@ def flash_attention_jnp(
     window: int = 0,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
+    kv_mask: Optional[jax.Array] = None,   # (B, Sk) per-example key validity
 ) -> jax.Array:
     """Blockwise online-softmax attention, pure JAX (flash-equivalent).
 
     Never materialises more than (B, KV, G, q_chunk, kv_chunk) scores.
+    ``kv_mask`` masks keys PER EXAMPLE (ragged batches: padded positions
+    must not leak into real queries' softmax, or embeddings stop being
+    invariant to how far the batch was padded — the property shape
+    bucketing relies on).  ``k_pos`` stays shared across the batch.
     """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
@@ -154,6 +159,8 @@ def flash_attention_jnp(
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
         k_pos = jnp.pad(k_pos, (0, pk), constant_values=-1)
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pk)))
 
     # time-major xs so lax.scan slices one chunk per step (scanning over an
     # index and slicing a closured array reads the full array every step in
@@ -163,6 +170,9 @@ def flash_attention_jnp(
     vg = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
     qp = q_pos.reshape(nq, q_chunk)
     kp = k_pos.reshape(nk, kv_chunk)
+    kmg = None
+    if kv_mask is not None:
+        kmg = jnp.moveaxis((kv_mask != 0).reshape(B, nk, kv_chunk), 1, 0)
     scale = 1.0 / math.sqrt(hd)
 
     def make_q_step(qc, qpc):
@@ -170,7 +180,11 @@ def flash_attention_jnp(
 
         def kv_step(carry, kx):
             acc, m, denom = carry
-            kc, vc, kpc = kx
+            if kmg is None:
+                kc, vc, kpc = kx
+                kmc = None
+            else:
+                kc, vc, kpc, kmc = kx        # kmc: (B, kv_chunk) bool
             # bf16 operands, fp32 MXU accumulation (no upcast traffic)
             s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc,
                            preferred_element_type=jnp.float32) * scale
@@ -180,6 +194,8 @@ def flash_attention_jnp(
             if window:
                 valid &= kpc[None, :] > qpc[:, None] - window
             s = jnp.where(valid[None, None, None], s, -1e30)
+            if kmc is not None:
+                s = jnp.where(kmc[:, None, None, None, :], s, -1e30)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -197,6 +213,10 @@ def flash_attention_jnp(
         jnp.zeros((B, KV, G, q_chunk), jnp.float32),
     )
 
+    def kv_xs(band=slice(None)):
+        xs = (kg[band], vg[band], kp[band])
+        return xs if kmg is None else xs + (kmg[band],)
+
     from repro.perf_flags import FLAGS
 
     if FLAGS.attn_band_skip and causal:
@@ -210,15 +230,14 @@ def flash_attention_jnp(
             lo = max(0, (qi * q_chunk - window + 1) // kv_chunk) if window else 0
             band = slice(lo, hi + 1)
             kv_step = make_q_step(qg[qi], qp[qi])
-            (acc, _, denom), _ = lax.scan(kv_step, init(),
-                                          (kg[band], vg[band], kp[band]))
+            (acc, _, denom), _ = lax.scan(kv_step, init(), kv_xs(band))
             outs.append(acc / jnp.maximum(denom[..., None], 1e-30))
         outs = jnp.stack(outs)                        # (nq, B, KV, G, qc, hd)
     else:
         def q_step(_, qx):
             qc, qpc = qx                     # (B, qc, KV, G, hd), (qc,)
             (acc, _, denom), _ = lax.scan(make_q_step(qc, qpc), init(),
-                                          (kg, vg, kp))
+                                          kv_xs())
             return None, acc / jnp.maximum(denom[..., None], 1e-30)
 
         _, outs = lax.scan(q_step, None, (qg, qp))    # (nq, B, KV, G, qc, hd)
@@ -238,16 +257,45 @@ def attn_forward(
     kv_x: Optional[jax.Array] = None,     # cross attention source (B, Skv, D)
     kv_positions: Optional[jax.Array] = None,
     return_kv: bool = False,
+    kv_mask: Optional[jax.Array] = None,  # (B, Skv) 1 = real key token
 ):
-    """Full-sequence attention for train / prefill / encoder / cross."""
+    """Full-sequence attention for train / prefill / encoder / cross.
+
+    ``FLAGS.attn_kernel`` selects the implementation: the chunked pure-JAX
+    flash path (baseline), or the Pallas TPU kernel
+    (``repro.kernels.flash_attention``) — "auto" picks the kernel exactly
+    when running on a TPU backend.  The kernel route assumes contiguous
+    [0, S) positions (true for every full-sequence caller here) and turns a
+    per-example ``kv_mask`` into prefix lengths, which is what the
+    embedder's left-aligned padding produces.
+    """
     kv_src = x if kv_x is None else kv_x
     kv_pos = positions if kv_positions is None else kv_positions
     q, k, v = _project_qkv(p, cfg, x, kv_src)
     if cfg.rope_theta:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, kv_pos, cfg.rope_theta)
-    out = flash_attention_jnp(q, k, v, positions, kv_pos,
-                              causal=causal, window=cfg.sliding_window if causal else 0)
+
+    from repro.perf_flags import FLAGS
+
+    backend = FLAGS.attn_kernel
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend in ("pallas", "interpret"):
+        from repro.kernels.flash_attention.ops import flash_attention
+        kv_len = None
+        if kv_mask is not None:
+            kv_len = jnp.sum(kv_mask != 0, axis=-1).astype(jnp.int32)
+        out = flash_attention(
+            jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+            jnp.moveaxis(v, 1, 2), causal=causal,
+            window=cfg.sliding_window if causal else 0,
+            backend=backend, kv_len=kv_len)
+        out = jnp.moveaxis(out, 2, 1)
+    else:
+        out = flash_attention_jnp(
+            q, k, v, positions, kv_pos, causal=causal,
+            window=cfg.sliding_window if causal else 0, kv_mask=kv_mask)
     y = out.reshape(*x.shape[:-1], -1) @ p["wo"].astype(x.dtype)
     if return_kv:
         return y, k, v

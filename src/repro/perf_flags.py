@@ -22,6 +22,12 @@ class PerfFlags:
     # causal/sliding-window band) instead of masking them — fewer chunk
     # iterations, less score traffic, fewer flops.
     attn_band_skip: bool = False
+    # attn_forward backend: "jnp" (baseline: chunked pure-JAX flash), "auto"
+    # (the Pallas kernel when running on TPU, pure-JAX elsewhere), "pallas" /
+    # "interpret" (force the kernel, compiled / interpreter).  The kernel
+    # route assumes contiguous [0, S) positions (what train / prefill /
+    # encoder / embedder all pass) and prefix-style kv masks.
+    attn_kernel: str = "jnp"
     # decode: pick label/argmax paths that avoid gathers over the
     # vocab-sharded logits (one-hot dot instead of take_along_axis).
     ce_onehot: bool = False

@@ -1,0 +1,184 @@
+"""Shape-bucketed execution layer: compile cache, padding waste, equality.
+
+The contract under test: the bucketed backend serves embeddings NUMERICALLY
+EQUAL to the fixed-max_tokens path (padding invariance via masked
+attention), while compiling one executable per (B_bucket, S_bucket) instead
+of one per raw batch size, and padding only to the bucket.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.bucketing import (BucketedEmbedderBackend, bucket_length,
+                                  default_buckets, length_bucket_fn,
+                                  next_pow2)
+from repro.core.routing import NPU, Query, TierSpec
+from repro.core.telemetry import Telemetry
+from repro.core.windve import JaxEmbedderBackend, WindVE
+from repro.models import embedder
+
+MAX_TOKENS = 64
+
+
+@pytest.fixture(scope="module")
+def bge_smoke():
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def queries(lengths, base_qid=0):
+    return [Query(qid=base_qid + i, length=ln)
+            for i, ln in enumerate(lengths)]
+
+
+# ---------------------------------------------------------------- helpers --
+class TestBucketHelpers:
+    def test_next_pow2(self):
+        assert [next_pow2(n) for n in (0, 1, 2, 3, 5, 8, 9, 1000)] == \
+            [1, 1, 2, 4, 8, 8, 16, 1024]
+
+    def test_bucket_length_clamps(self):
+        assert bucket_length(10, min_bucket=16, max_bucket=128) == 16
+        assert bucket_length(70, min_bucket=16, max_bucket=128) == 128
+        assert bucket_length(500, min_bucket=16, max_bucket=128) == 128
+
+    def test_length_bucket_fn(self):
+        fn = length_bucket_fn(16, 128)
+        assert fn(Query(qid=1, length=20)) == 32
+        assert fn(Query(qid=2, length=33)) == 64
+
+    def test_default_buckets_grid(self):
+        grid = default_buckets(16, 128, min_seq_bucket=32)
+        assert (1, 32) in grid and (16, 128) in grid
+        assert len(grid) == 5 * 3            # B {1,2,4,8,16} x S {32,64,128}
+        assert all(b == next_pow2(b) and s == next_pow2(s) for b, s in grid)
+
+    def test_batch_plan_binary_decomposition(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        assert be._batch_plan(8) == [8]
+        assert be._batch_plan(9) == [8, 1]        # no padding rows
+        assert be._batch_plan(13) == [8, 4, 1]
+        assert sum(be._batch_plan(7)) == 7        # decomposition: zero pad
+        # min_batch_bucket trades padding rows for fewer launches
+        be4 = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                      min_batch_bucket=4)
+        assert be4._batch_plan(9) == [8, 4]       # tail rounded up to min
+        assert be4._batch_plan(2) == [4]
+        assert be4._batch_plan(13) == [16]        # ties prefer ONE launch
+
+
+# ---------------------------------------------------------- compile cache --
+class TestCompileCache:
+    def test_same_bucket_no_retrace_new_bucket_retraces(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                     min_seq_bucket=8)
+        be.embed_batch(queries([10, 12, 9, 15]))       # bucket (4, 16)
+        assert be.traces == 1
+        be.embed_batch(queries([16, 11, 13, 14]))      # same bucket (4, 16)
+        assert be.traces == 1, "retraced inside a warm bucket"
+        assert be.bucket_hits == 1
+        be.embed_batch(queries([30, 20]))              # new bucket (2, 32)
+        assert be.traces == 2
+        assert (4, 16) in be.warm_buckets and (2, 32) in be.warm_buckets
+
+    def test_fixed_backend_retraces_per_batch_size(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        be.embed_batch(queries([10, 12, 9]))
+        be.embed_batch(queries([16, 11]))              # new raw B -> retrace
+        be.embed_batch(queries([30, 20]))              # same raw B -> cached
+        assert be.traces == 2
+
+    def test_prewarm_kills_compile_stalls(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                     min_seq_bucket=8)
+        grid = default_buckets(4, MAX_TOKENS, min_seq_bucket=8)
+        n = be.prewarm(grid)
+        assert n == len(grid) == be.traces
+        for lens in ([5], [9, 9], [40, 33, 20], [7, 7, 7, 60]):
+            be.embed_batch(queries(lens))
+        assert be.traces == n, "serving retraced despite prewarm"
+        assert be.prewarm(grid) == 0               # idempotent
+
+    def test_prewarm_via_constructor(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                     prewarm_buckets=[(2, 16), (2, 32)])
+        assert be.traces == 2
+        be.embed_batch(queries([10, 12]))
+        assert be.traces == 2
+
+
+# ------------------------------------------------------- numeric equality --
+class TestBucketedEquality:
+    def test_embeddings_equal_fixed_path(self, bge_smoke):
+        """Bucket-padded batches must embed IDENTICALLY to max-padded ones
+        (attention masks padded keys, so pad width is invisible)."""
+        cfg, params = bge_smoke
+        fixed = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        buck = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                       min_seq_bucket=8)
+        for lens in ([10, 40, 25], [5], [9, 9, 9, 9, 9],
+                     [33, 7, 60, 12, 50, 21, 44]):     # plan [4,2,1]
+            a = np.stack(fixed.embed_batch(queries(lens)))
+            b = np.stack(buck.embed_batch(queries(lens)))
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_padded_waste_lower_than_fixed(self, bge_smoke):
+        cfg, params = bge_smoke
+        fixed = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        buck = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                       min_seq_bucket=8)
+        for lens in ([10, 12, 9], [8, 8, 8, 8], [20, 25]):
+            fixed.embed_batch(queries(lens))
+            buck.embed_batch(queries(lens))
+        assert buck.real_tokens == fixed.real_tokens
+        assert buck.padded_waste < fixed.padded_waste / 2
+
+
+# ------------------------------------------------ truncation + telemetry --
+class TestTruncationTelemetry:
+    def test_both_backends_count_truncations(self, bge_smoke):
+        cfg, params = bge_smoke
+        tel = Telemetry()
+        fixed = JaxEmbedderBackend(cfg, params, max_tokens=16, telemetry=tel)
+        long_payload = [Query(qid=1, payload=np.arange(1, 40), length=39),
+                        Query(qid=2, length=10)]
+        fixed.embed_batch(long_payload)
+        assert fixed.truncated == 1 and tel.truncated == 1
+        buck = BucketedEmbedderBackend(cfg, params, max_tokens=16,
+                                       telemetry=tel)
+        buck.embed_batch(long_payload)
+        assert buck.truncated == 1 and tel.truncated == 2
+
+    def test_summary_surfaces_truncations(self):
+        t = Telemetry(slo=1.0)
+        t.record_dispatch(NPU)
+        t.record_truncations(3)
+        t.record_completion(Query(qid=1, arrival_t=0.0, done_t=0.5), NPU)
+        s = t.summary()
+        assert s["truncated"] == 3
+        assert s["accepted"] == 1 and s["completed"] == 1
+        assert s["violations"] == 0 and s["p50_s"] == pytest.approx(0.5)
+        assert s[f"dispatched_{NPU}"] == 1
+
+    def test_engine_wires_backend_telemetry(self, bge_smoke):
+        """WindVE attaches its shared stats to backends, so truncations show
+        up in the engine's Telemetry.summary()."""
+        cfg, params = bge_smoke
+        be = BucketedEmbedderBackend(cfg, params, max_tokens=16)
+        ve = WindVE(tiers=[TierSpec(NPU, 8, backend=be,
+                                    bucket_fn=length_bucket_fn(8, 16))])
+        try:
+            assert be.telemetry is ve.stats
+            f = ve.submit(payload=np.arange(1, 40), length=39)
+            f.result(timeout=30)
+            assert ve.stats.summary()["truncated"] == 1
+        finally:
+            ve.shutdown()

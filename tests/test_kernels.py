@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels.flash_attention import (attention_ref, flash_attention,
                                            flash_attention_pallas)
+from repro.kernels.pool_norm import pool_norm, pool_norm_pallas, pool_norm_ref
 from repro.kernels.rmsnorm import rmsnorm_pallas, rmsnorm_ref
 from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
 
@@ -41,6 +42,62 @@ def test_flash_attention_vs_ref(case, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32),
                                atol=tol(dtype), rtol=tol(dtype))
+
+
+RAGGED_CASES = [
+    # B, H, KV, Sq, Sk, hd, causal, lens
+    (2, 4, 2, 96, 96, 64, False, (50, 96)),     # embedder-shaped, ragged
+    (2, 2, 1, 64, 64, 32, True, (10, 64)),      # causal + ragged
+    (3, 4, 4, 130, 130, 64, False, (1, 77, 130)),  # block padding + ragged
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kv_len_vs_ref(case, dtype):
+    """Per-example valid-key prefixes (ragged/bucketed batches)."""
+    B, H, KV, Sq, Sk, hd, causal, lens = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, hd), jnp.float32).astype(dtype)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    ref = attention_ref(q, k, v, causal=causal, kv_len=kv_len)
+    got = flash_attention_pallas(q, k, v, causal=causal, interpret=True,
+                                 kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+    # the pure-JAX chunked path must mask identically (kv_len -> kv_mask)
+    gj = flash_attention(q, k, v, causal=causal, backend="jnp",
+                         kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(gj, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_attn_forward_kernel_flag_matches_jnp_path():
+    """FLAGS.attn_kernel routes attn_forward through the Pallas kernel; the
+    interpreted kernel must agree with the default pure-JAX path, masks
+    included (the embedder's serving configuration)."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+    from repro.perf_flags import reset_flags, set_flags
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    p = L.init_attention(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 40, cfg.d_model))
+    pos = jnp.arange(40, dtype=jnp.int32)
+    kv_mask = (jnp.arange(40)[None, :] <
+               jnp.asarray([[23], [40]])).astype(jnp.float32)
+    base = L.attn_forward(p, cfg, x, pos, causal=False, kv_mask=kv_mask)
+    try:
+        set_flags(attn_kernel="interpret")
+        kernel = L.attn_forward(p, cfg, x, pos, causal=False,
+                                kv_mask=kv_mask)
+    finally:
+        reset_flags()
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(base),
+                               atol=2e-5)
 
 
 def test_flash_jnp_backend_matches_ref():
@@ -120,6 +177,68 @@ def test_ssm_matches_model_layer_scan():
     y2, h2 = ssm_scan_ref(xc, dt, Bm, Cm, A)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+# ---------------------------------------------------------------- pool ----
+POOL_CASES = [
+    # B, S, D, block_b
+    (2, 33, 128, 2),      # ragged rows + batch-block padding
+    (5, 64, 256, 8),      # block_b > B
+    (1, 16, 64, 1),
+    (9, 40, 128, 4),      # B not a multiple of block_b
+]
+
+
+@pytest.mark.parametrize("case", POOL_CASES)
+@pytest.mark.parametrize("pool", ["mean", "cls"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pool_norm_vs_ref(case, pool, dtype):
+    B, S, D, bb = case
+    ks = jax.random.split(KEY, 2)
+    h = jax.random.normal(ks[0], (B, S, D), jnp.float32).astype(dtype)
+    lens = jax.random.randint(ks[1], (B,), 1, S + 1)
+    mask = (jnp.arange(S)[None, :] < lens[:, None]).astype(jnp.float32)
+    ref = pool_norm_ref(h, mask, pool)
+    got = pool_norm_pallas(h, mask, pool, block_b=bb, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=tol(dtype), rtol=tol(dtype))
+    assert got.dtype == jnp.float32            # paper: fp32 output vectors
+    norms = np.linalg.norm(np.asarray(got), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_pool_norm_fully_masked_row_is_zero():
+    """A bucketed batch's padding row (all-zero mask) pools to the zero
+    vector in both modes — no NaNs, no garbage unit vectors."""
+    h = jax.random.normal(KEY, (2, 8, 16))
+    mask = jnp.zeros((2, 8)).at[0, :3].set(1.0)
+    for pool in ("mean", "cls"):
+        for fn in (pool_norm_ref,
+                   lambda a, b, p: pool_norm_pallas(a, b, p, interpret=True)):
+            out = np.asarray(fn(h, mask, pool))
+            assert np.isfinite(out).all()
+            assert np.linalg.norm(out[0]) == pytest.approx(1.0, abs=1e-5)
+            assert np.abs(out[1]).max() == 0.0
+
+
+def test_pool_norm_matches_embedder_tail():
+    """The ops wrapper (backend dispatch) is what models.embedder calls; its
+    'ref' route must equal the kernel route."""
+    h = jax.random.normal(KEY, (3, 24, 64))
+    mask = (jnp.arange(24)[None, :] <
+            jnp.asarray([[24], [10], [1]])).astype(jnp.float32)
+    a = pool_norm(h, mask, pool="mean", backend="ref")
+    b = pool_norm(h, mask, pool="mean", backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_pool_norm_rejects_unknown_mode():
+    h = jnp.zeros((1, 4, 8))
+    m = jnp.ones((1, 4))
+    with pytest.raises(ValueError):
+        pool_norm_ref(h, m, "max")
+    with pytest.raises(ValueError):
+        pool_norm_pallas(h, m, "max", interpret=True)
 
 
 # ---------------------------------------------------------------- rmsnorm --

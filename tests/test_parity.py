@@ -1,13 +1,16 @@
 """Engine-vs-DES parity and engine regression tests for the shared core.
 
 Both drivers (threaded ``WindVE``, event-driven ``ServingSimulator``) route
-every query through the same ``QueueManager`` + ``DispatchPolicy`` code, so
-their dispatch decisions on the same arrival pattern must agree exactly.
+every query through the same ``QueueManager`` + ``DispatchPolicy`` code and
+form batches through the same ``QueueManager.pop_batch`` (bucket_fn-aware),
+so their dispatch decisions on the same arrival pattern must agree exactly.
 """
 import time
+from dataclasses import dataclass, field
 
 import pytest
 
+from repro.core.bucketing import length_bucket_fn
 from repro.core.routing import (BUSY, CPU, NPU, CascadePolicy,
                                 LengthAwarePolicy, TierSpec)
 from repro.core.simulator import DeviceModel, ServingSimulator, cpu_core_scaled
@@ -87,6 +90,71 @@ class TestEngineDESParity:
         eng_disp, eng_rej = burst_engine(eng_tiers, 5, policy=policy,
                                          length=500)
         assert eng_disp == {NPU: 2} and eng_rej == 3
+
+
+@dataclass(frozen=True)
+class RecordingModel(DeviceModel):
+    """DeviceModel that records every (batch_size, length) it services."""
+
+    calls: list = field(default_factory=list, compare=False)
+
+    def latency(self, concurrency, length=75, rng=None):
+        self.calls.append((int(concurrency), int(length)))
+        return super().latency(concurrency, length, rng)
+
+
+class TestBucketedBatchFormationParity:
+    """Bucketed pop_batch drives BOTH drivers on the same arrival trace."""
+
+    LENGTHS = [10, 70, 20, 120, 30, 80, 15, 40]
+    BUCKET = staticmethod(length_bucket_fn(min_bucket=32, max_bucket=128))
+
+    def test_engine_and_sim_dispatch_agree_with_bucket_fn(self):
+        bucket = self.BUCKET
+        npu = RecordingModel(NPU_DEV.name, NPU_DEV.beta, NPU_DEV.b, NPU_DEV.a)
+        sim = ServingSimulator(
+            tiers=[TierSpec(NPU, 6, model=npu, bucket_fn=bucket)], slo_s=9.0)
+        res = sim.run([(0.0, ln) for ln in self.LENGTHS])
+        eng_tiers = [TierSpec(NPU, 6, backend=ModeledBackend(NPU_DEV, 4),
+                              bucket_fn=bucket)]
+        ve = WindVE(tiers=eng_tiers)
+        seen = []
+        ve.add_batch_hook(lambda tier, batch, lat: seen.append(list(batch)))
+        try:
+            futs = [ve.submit(length=ln) for ln in self.LENGTHS]
+            done = [f for f in futs if f is not None]
+            for f in done:
+                f.result(timeout=30)
+        finally:
+            ve.shutdown()
+        # identical admission verdicts on the identical trace
+        assert dict(ve.stats.dispatched) == dict(res.dispatched) == {NPU: 6}
+        assert ve.stats.rejected == res.rejected == 2
+        assert res.n_completed == len(done) == 6
+        # EVERY batch either driver formed is single-bucket (the contract
+        # that lets the backend pad to the bucket, not the straggler)
+        for b, ln in npu.calls:                         # DES service calls
+            assert ln <= 128
+        sim_batches = npu.calls
+        assert all(len({bucket(q) for q in batch}) == 1 for batch in seen)
+        assert sum(c for c, _ in sim_batches) == 6
+        assert sum(len(b) for b in seen) == 6
+
+    def test_des_bucketed_batches_are_single_bucket_and_fifo(self):
+        """Burst trace, deterministic DES: buckets are 10/20/30/15 -> 32,
+        40 -> 64, 70/120/80 -> 128; the head of the line picks each batch's
+        bucket and the modeled latency follows the batch MAX length."""
+        bucket = self.BUCKET
+        npu = RecordingModel("npu", beta=0.25, b=0.0, a=0.0)
+        sim = ServingSimulator(
+            tiers=[TierSpec(NPU, 100, model=npu, bucket_fn=bucket)],
+            slo_s=50.0)
+        res = sim.run([(0.0, ln) for ln in self.LENGTHS])
+        assert res.n_completed == len(self.LENGTHS)
+        assert npu.calls == [(4, 30),       # qids 1,3,5,7: bucket 32
+                             (3, 120),      # qids 2,4,6:   bucket 128
+                             (1, 40)]       # qid 8:        bucket 64
+        assert res.violations == 0
 
 
 class TestFuturesRace:

@@ -107,6 +107,58 @@ class TestLengthAwarePolicy:
             LengthAwarePolicy(fast_tiers=0)
 
 
+class TestBucketedPopBatch:
+    """Length-aware batch formation: FIFO picks the bucket, the bucket
+    fills the batch, everyone else keeps their place in line."""
+
+    BUCKET = staticmethod(lambda q: 32 * ((q.length + 31) // 32))
+
+    def push(self, qm, lengths):
+        for i, ln in enumerate(lengths):
+            assert qm.dispatch(q(i + 1, length=ln)) == NPU
+
+    def test_head_of_line_picks_the_bucket(self):
+        qm = QueueManager([TierSpec(NPU, 100, bucket_fn=self.BUCKET)])
+        self.push(qm, [10, 70, 20, 30, 80])
+        batch = qm.pop_batch(NPU)
+        # oldest query (len 10, bucket 32) decides; 70/80 stay queued
+        assert [x.qid for x in batch] == [1, 3, 4]
+        batch2 = qm.pop_batch(NPU)
+        assert [x.qid for x in batch2] == [2, 5]       # FIFO preserved
+
+    def test_max_batch_respected_within_bucket(self):
+        qm = QueueManager([TierSpec(NPU, 100, max_batch=2,
+                                    bucket_fn=self.BUCKET)])
+        self.push(qm, [10, 12, 14, 70])
+        assert [x.qid for x in qm.pop_batch(NPU)] == [1, 2]
+        assert [x.qid for x in qm.pop_batch(NPU)] == [3]
+        assert [x.qid for x in qm.pop_batch(NPU)] == [4]
+
+    def test_leftovers_keep_arrival_order(self):
+        qm = QueueManager([TierSpec(NPU, 100, max_batch=1,
+                                    bucket_fn=self.BUCKET)])
+        self.push(qm, [10, 20, 30])
+        assert [x.qid for x in qm.pop_batch(NPU)] == [1]
+        assert [x.qid for x in qm.pop_batch(NPU)] == [2]
+        assert [x.qid for x in qm.pop_batch(NPU)] == [3]
+
+    def test_in_flight_accounting_unchanged(self):
+        qm = QueueManager([TierSpec(NPU, 4, bucket_fn=self.BUCKET)])
+        self.push(qm, [10, 70, 20])
+        batch = qm.pop_batch(NPU)                      # pops 2 (bucket 32)
+        assert len(batch) == 2
+        assert len(qm.queues[NPU]) == 3                # 1 queued + 2 in flight
+        assert qm.dispatch(q(9)) == NPU                # depth 4: one slot left
+        assert qm.dispatch(q(10)) == BUSY
+        qm.queues[NPU].finish(len(batch))
+        assert qm.dispatch(q(11)) == NPU
+
+    def test_no_bucket_fn_is_plain_fifo(self):
+        qm = QueueManager([TierSpec(NPU, 100)])
+        self.push(qm, [10, 70, 20])
+        assert [x.qid for x in qm.pop_batch(NPU)] == [1, 2, 3]
+
+
 class TestLeastLoadedPolicy:
     def test_balances_by_free_share(self):
         qm = QueueManager([TierSpec("A", 4), TierSpec("B", 2)],
