@@ -1,21 +1,30 @@
 """Real-engine microbenchmarks on this host: dispatch overhead of the queue
 manager (Algorithm 1) and the actual JAX embedder latency-vs-concurrency
-curve (the paper's Eq. 12, measured for real on this CPU)."""
+curve (the paper's Eq. 12, measured for real on this CPU).
+
+``--devices N`` (standalone runs; the shared harness convention with
+``sharded_embed_microbench``) forces an N-device host mesh before importing
+jax and adds the device-sharded backend's Eq. 12 curve next to the
+single-device one.
+"""
 from __future__ import annotations
 
-import jax
+import argparse
+import os
+import sys
 
 from benchmarks.common import Row, emit, time_us
-from repro.configs import get_config
-from repro.core.estimator import fit_latency
-from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
-                                LengthAwarePolicy, Query, QueueManager,
-                                TierSpec)
-from repro.core.windve import JaxEmbedderBackend
-from repro.models import embedder
+def run(devices: int = 1) -> list[Row]:
+    import jax
 
+    from repro.configs import get_config
+    from repro.core.estimator import fit_latency
+    from repro.core.routing import (CPU, NPU, CascadePolicy,
+                                    LeastLoadedPolicy, LengthAwarePolicy,
+                                    Query, QueueManager, TierSpec)
+    from repro.core.windve import JaxEmbedderBackend
+    from repro.models import embedder
 
-def run() -> list[Row]:
     rows: list[Row] = []
 
     # per-policy dispatch cost through the shared scheduling core
@@ -54,8 +63,53 @@ def run() -> list[Row]:
     rows.append(("engine/jax-embedder-batch16", lats[-1] / 16 * 1e6,
                  f"measured Eq.12 fit: alpha={fit.alpha*1e3:.2f}ms "
                  f"beta={fit.beta*1e3:.2f}ms r2={fit.r2:.3f}"))
+
+    # sharded fan-out: the same curve through the device-sharded backend
+    # (batch over the mesh's data axis); on one device this IS the bucketed
+    # single-device path, so the row only appears with a real fan-out
+    ndev = min(max(1, devices), len(jax.devices()))
+    if ndev > 1:
+        from repro.core.sharded_backend import ShardedEmbedderBackend
+
+        sbe = ShardedEmbedderBackend(cfg, params, max_tokens=32,
+                                     devices=jax.devices()[:ndev],
+                                     dtype="bf16", async_dispatch=True)
+
+        def sharded_lat(c: int) -> float:
+            batch = [Query(qid=j, length=24) for j in range(c)]
+            import time as _t
+            t0 = _t.monotonic()
+            sbe.embed_batch(batch)
+            return _t.monotonic() - t0
+
+        # probe at multiples of the device count: below it every batch pads
+        # to one identical ndev-row shape (flat fit), and keeping >= 2
+        # points is what fit_latency requires
+        scs = [ndev * c for c in (1, 2, 4, 8)]
+        for c in scs:
+            sharded_lat(c)
+        slats = [min(sharded_lat(c) for _ in range(3)) for c in scs]
+        sfit = fit_latency(scs, slats)
+        rows.append((f"engine/sharded-embedder-{ndev}dev-batch{scs[-1]}",
+                     slats[-1] / scs[-1] * 1e6,
+                     f"measured Eq.12 fit: alpha={sfit.alpha*1e3:.2f}ms "
+                     f"beta={sfit.beta*1e3:.2f}ms r2={sfit.r2:.3f}"))
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=1,
+                    help="forced host device count (standalone runs only)")
+    args = ap.parse_args()
+    if args.devices > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+    emit(run(devices=args.devices))
+
+
 if __name__ == "__main__":
-    emit(run())
+    main()

@@ -15,6 +15,7 @@ MODULES = [
     "benchmarks.fig6_cpu_cores",    # Fig. 6: CPU-core scalability
     "benchmarks.engine_microbench",  # real engine on this host
     "benchmarks.bucketing_microbench",  # shape bucketing vs fixed padding
+    "benchmarks.sharded_embed_microbench",  # device mesh fan-out + bf16
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 

@@ -1,0 +1,196 @@
+"""Device-sharded embedding serving A/B: throughput scaling, recompiles,
+precision parity and allocation reuse for ``ShardedEmbedderBackend``.
+
+The same bucketed batch stream is served two ways:
+
+* 1 device  — the PR 2 single-device bucketed path (what a sharded mesh of
+              one degrades to);
+* N devices — data-parallel mesh fan-out (serve-mode rules: weights
+              resident, batch over ``data``) + bf16-resident weights +
+              donated input buffers + async double-buffered dispatch.
+
+Run standalone it forces an 8-device host mesh BEFORE importing jax
+(``--xla_force_host_platform_device_count``); under ``benchmarks.run`` it
+uses however many devices the process already has and says so in the row
+(no silent caps).
+
+Self-asserting regression guards (CI runs ``--smoke``; a raise exits
+non-zero): near-linear throughput scaling — >= 3x on an 8-device mesh when
+the host has the cores to back it, scaled by ``min(devices, cores)`` because
+forced host devices share physical cores; ZERO steady-state recompiles after
+prewarm; bf16 embeddings within 1e-2 cosine of the fp32 oracle; and one
+reusable host staging pair per (B, S) bucket (zero steady-state host
+allocations).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, emit
+
+DEFAULT_DEVICES = 8
+MAX_TOKENS = 64
+MIN_SEQ_BUCKET = 16
+# Fig.-5-shaped mix, all inside the 64-token window so batches stay dense
+LENGTHS = (12, 20, 28, 40, 55, 60)
+WEIGHTS = (0.25, 0.2, 0.15, 0.15, 0.15, 0.1)
+
+
+def _force_devices(n: int) -> None:
+    """Must run BEFORE the first jax import (host device count is fixed at
+    backend init)."""
+    assert "jax" not in sys.modules, "set device count before importing jax"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+def _batches(n_batches: int, batch: int, seed: int = 0) -> List[List]:
+    from repro.core.routing import Query
+
+    rng = np.random.default_rng(seed)
+    out, qid = [], 0
+    for _ in range(n_batches):
+        lens = rng.choice(LENGTHS, size=batch, p=WEIGHTS)
+        out.append([Query(qid=(qid := qid + 1), length=int(ln))
+                    for ln in lens])
+    return out
+
+
+def _serve_qps(backend, batches: List[List]) -> float:
+    """Double-buffered serving pass (the engine worker's async discipline):
+    batch N-1's fetch overlaps batch N's compute."""
+    n = sum(len(b) for b in batches)
+    t0 = time.perf_counter()
+    prev = None
+    for b in batches:
+        fetch = backend.embed_batch_async(b)
+        if prev is not None:
+            prev()
+        prev = fetch
+    prev()
+    return n / (time.perf_counter() - t0)
+
+
+def run(smoke: bool = False) -> list[Row]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.sharded_backend import ShardedEmbedderBackend, \
+        _serve_devices
+    from repro.models import embedder
+
+    devs = _serve_devices()
+    ndev = len(devs)
+    cores = os.cpu_count() or 1
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+
+    batch = 16 if smoke else 32
+    n_batches = 6 if smoke else 16
+    batches = _batches(n_batches, batch)
+
+    def make(n: int, dtype: str, **kw) -> ShardedEmbedderBackend:
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    devices=devs[:n], dtype=dtype,
+                                    min_seq_bucket=MIN_SEQ_BUCKET, **kw)
+        be.prewarm([(batch, s) for s in (16, 32, 64)])
+        return be
+
+    rows: list[Row] = []
+
+    # --- throughput scaling: same bf16 bucketed stream, 1 vs N devices ----
+    be1 = make(1, "bf16", async_dispatch=True)
+    beN = make(ndev, "bf16", donate=True, async_dispatch=True)
+    warmN = beN.traces
+    _serve_qps(be1, batches[:2])          # warm the timing path
+    _serve_qps(beN, batches[:2])
+    qps1 = max(_serve_qps(be1, batches) for _ in range(2))
+    qpsN = max(_serve_qps(beN, batches) for _ in range(2))
+    speedup = qpsN / qps1
+    # forced host devices SHARE physical cores: a 2-core container cannot
+    # show 8-way scaling no matter how well the mesh fans out, so the floor
+    # follows min(devices, cores) and caps at the 3x acceptance bar (hit on
+    # any >= 6-core host — e.g. a real 8-NPU deployment)
+    usable = min(ndev, cores)
+    required = min(3.0, 0.55 * usable)
+    rows.append((f"sharded/throughput-{ndev}dev", 1e6 / qpsN,
+                 f"{qpsN:.0f} q/s vs {qps1:.0f} q/s on 1 dev = "
+                 f"{speedup:.2f}x (>= {required:.2f}x required; "
+                 f"{ndev} devices over {cores} cores)"))
+    if ndev == 1:
+        rows.append(("sharded/scaling-skipped", 0.0,
+                     "single device: run standalone or set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8"))
+
+    # --- zero steady-state recompiles after prewarm ----------------------
+    serving_retraces = beN.traces - warmN
+    rows.append(("sharded/serving-recompiles", 0.0,
+                 f"{serving_retraces} retraces over "
+                 f"{2 * (len(batches) + 2)} served batches after prewarm "
+                 f"(0 required)"))
+
+    # --- bounded, reused host staging (a small ring per bucket) ----------
+    staged = sum(len(r) for r in beN._staging.values())
+    used = len(beN._staging)
+    rows.append(("sharded/host-staging-arrays", 0.0,
+                 f"{staged} staging pairs across {used} live (B, S) buckets "
+                 f"(<= {beN._staging_slots}/bucket: steady state allocates "
+                 f"nothing)"))
+
+    # --- bf16 vs fp32-oracle parity (the served-vector contract) ---------
+    oracle = make(1, "fp32")
+    eq = _batches(1, 8, seed=7)[0]
+    a = np.stack(oracle.embed_batch(eq))
+    b = np.stack(beN.embed_batch(eq))
+    cos = 1.0 - (a * b).sum(-1) / (np.linalg.norm(a, axis=-1)
+                                   * np.linalg.norm(b, axis=-1))
+    cos_max = float(cos.max())
+    rows.append(("sharded/bf16-parity", 0.0,
+                 f"max cosine distance vs fp32 oracle = {cos_max:.2e} "
+                 f"(<= 1e-2 required; pool_norm epilogue stays fp32)"))
+
+    # --- async dispatch: enqueue cost vs blocking fetch ------------------
+    t0 = time.perf_counter()
+    fetch = beN.embed_batch_async(batches[0])
+    t_enq = time.perf_counter() - t0
+    fetch()
+    t_tot = time.perf_counter() - t0
+    rows.append(("sharded/async-enqueue", t_enq * 1e6,
+                 f"enqueue {t_enq*1e3:.2f}ms vs {t_tot*1e3:.2f}ms to "
+                 f"results: worker overlaps the gap (donate="
+                 f"{beN.donate})"))
+
+    # regression guards — benchmarks.run turns a raise into exit code 1
+    assert speedup >= required, \
+        f"sharded throughput {speedup:.2f}x < {required:.2f}x " \
+        f"({ndev} devices, {cores} cores)"
+    assert serving_retraces == 0, \
+        f"steady-state serving retraced {serving_retraces}x after prewarm"
+    assert staged <= max(used, 1) * beN._staging_slots, \
+        f"staging arrays leak: {staged} pairs for {used} buckets"
+    assert cos_max <= 1e-2, \
+        f"bf16 embeddings diverged from fp32 oracle: {cos_max:.2e}"
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run (CI)")
+    ap.add_argument("--devices", type=int, default=DEFAULT_DEVICES,
+                    help="forced host device count (standalone runs only)")
+    args = ap.parse_args()
+    _force_devices(args.devices)
+    emit(run(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -164,29 +164,42 @@ class BucketedEmbedderBackend(JaxEmbedderBackend):
             new += 1
         return new
 
-    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
-        jnp = self._jnp
-        B = len(queries)
+    @staticmethod
+    def _qlen(q: Query) -> int:
+        return len(q.payload) if q.payload is not None else q.length
 
-        def qlen(q: Query) -> int:
-            return len(q.payload) if q.payload is not None else q.length
+    def _stage_chunk(self, chunk: Sequence[Query], bb: int, sb: int):
+        """Tokenize one chunk into (bb, sb) device-ready inputs.
 
-        out: List[np.ndarray] = []
+        Returns (tokens, mask, real_tokens, truncated).  The sharded backend
+        overrides this with its staging-ring + mesh-sharded transfer; here
+        fresh host arrays are handed straight to jit.  Padding rows beyond
+        the chunk stay all-zero (dropped by pooling).
+        """
+        toks, mask, real, truncated = self._tokenize(
+            chunk, sb, out=(np.zeros((bb, sb), np.int32),
+                            np.zeros((bb, sb), np.float32)))
+        return (self._jnp.asarray(toks), self._jnp.asarray(mask), real,
+                truncated)
+
+    def _enqueue_chunks(self, queries: Sequence[Query]
+                        ) -> List[Tuple[int, object]]:
+        """The single chunking/accounting path for every bucketed backend:
+        decompose the batch (``_batch_plan``), bucket each chunk's own
+        sequence length, stage (``_stage_chunk``), count, and enqueue the
+        jit execution.  Returns [(chunk_len, device_result), ...] in query
+        order; results are fetched by the caller (sync or deferred)."""
+        handles: List[Tuple[int, object]] = []
         start = 0
-        for bb in self._batch_plan(B):
+        for bb in self._batch_plan(len(queries)):
             chunk = queries[start:start + bb]
             start += len(chunk)
             # pad only to this chunk's own bucket; truncation still happens
             # at the global max_tokens cap, exactly like the fixed backend
-            longest = max(min(qlen(q), self.max_tokens) for q in chunk)
+            longest = max(min(self._qlen(q), self.max_tokens) for q in chunk)
             sb = bucket_length(longest, self.min_seq_bucket, self.max_tokens)
-            toks, mask, real, truncated = self._tokenize(chunk, sb)
+            toks, mask, real, truncated = self._stage_chunk(chunk, bb, sb)
             self._record_truncations(truncated)
-            if bb > len(chunk):
-                pad = bb - len(chunk)
-                toks = np.concatenate([toks, np.zeros((pad, sb), np.int32)])
-                mask = np.concatenate([mask,
-                                       np.zeros((pad, sb), np.float32)])
             with self._bucket_lock:
                 if (bb, sb) in self._buckets:
                     self.bucket_hits += 1
@@ -194,7 +207,12 @@ class BucketedEmbedderBackend(JaxEmbedderBackend):
                     self._buckets.add((bb, sb))
                 self.real_tokens += real
                 self.padded_tokens += bb * sb - real
-            emb = np.asarray(self._embed(self.params, jnp.asarray(toks),
-                                         jnp.asarray(mask)))
-            out.extend(emb[i] for i in range(len(chunk)))
+            handles.append((len(chunk), self._embed(self.params, toks, mask)))
+        return handles
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        out: List[np.ndarray] = []
+        for n, dev in self._enqueue_chunks(queries):
+            emb = np.asarray(dev)
+            out.extend(emb[i] for i in range(n))
         return out

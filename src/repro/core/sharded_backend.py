@@ -1,0 +1,231 @@
+"""Device-sharded, donation-aware bf16 embedding serving backend.
+
+The paper's deployment-cost formula (Eq. 12) makes per-batch service time on
+the accelerator tier the lever behind concurrency-per-device; PR 2 made the
+hot path's shapes stable and enumerable (the bucketed (B, S) compile cache).
+This module spends that stability on the device side of the batch:
+
+* **mesh fan-out** — one embedding tier becomes a jax ``Mesh`` over N local
+  devices.  Every bucketed batch is data-parallel sharded over the mesh
+  using the serve-mode rules in ``repro.parallel.sharding``
+  (``serve_embed_shardings``: weights RESIDENT — no ``data``-axis FSDP
+  specs, so no per-batch weight all-gathers — batch over ``data``).  A
+  single-device mesh degrades to exactly the PR 2 bucketed behaviour.
+* **bf16-resident serving weights** — ``dtype="bf16"`` casts the param tree
+  ONCE at load and runs every trunk matmul in bf16; the ``pool_norm``
+  epilogue always accumulates fp32 (see ``repro.kernels.pool_norm``), so
+  served vectors stay fp32 unit vectors within 1e-2 cosine of the
+  ``dtype="fp32"`` oracle (guarded by tests + the sharded microbench).
+* **buffer donation** — ``donate=True`` passes the token/mask device buffers
+  as ``jit(..., donate_argnums=(1, 2))`` so XLA may reuse their memory
+  instead of allocating fresh HBM per batch; paired with one reusable host
+  staging array pair per (B, S) bucket, steady-state serving performs zero
+  fresh host allocations and zero retraces.
+* **async dispatch** — ``embed_batch_async`` returns as soon as every chunk
+  execution is enqueued; the returned fetch thunk blocks for device->host
+  transfer.  The engine worker (``repro.core.windve``) double-buffers: batch
+  N-1's fetch overlaps batch N's compute, so the worker thread stops
+  blocking on ``device_get``.
+
+Correctness notes: the batch bucket floor is raised to the mesh's
+data-parallel size so every chunk's batch dim divides the mesh exactly (jit
+input shardings require it); padding rows carry an all-zero mask and pool to
+zero vectors that are dropped from the output, so sharding never changes
+served embeddings.
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bucketing import BucketedEmbedderBackend, default_buckets, \
+    next_pow2
+from repro.core.routing import Query
+from repro.core.telemetry import Telemetry
+
+
+_cpu_donation_warning_filtered = False
+
+
+def _filter_cpu_donation_warning() -> None:
+    """Once-only: silence XLA's "donated buffers were not usable" warning on
+    the CPU backend, where donation is unimplemented and the warning cannot
+    indicate a real mis-specification."""
+    global _cpu_donation_warning_filtered
+    if not _cpu_donation_warning_filtered:
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        _cpu_donation_warning_filtered = True
+
+
+def _serve_devices(devices=None) -> list:
+    """Local devices the serve mesh fans out over, clamped to a power of two
+    so every pow2 batch bucket divides the data axis exactly."""
+    import jax
+
+    devices = list(jax.local_devices() if devices is None else devices)
+    if not devices:
+        raise ValueError("need at least one device")
+    usable = 1 << (len(devices).bit_length() - 1)   # largest pow2 <= n
+    return devices[:usable]
+
+
+class ShardedEmbedderBackend(BucketedEmbedderBackend):
+    """Bucketed embedder fanned out over a data-parallel device mesh.
+
+    ``dtype`` / ``donate`` / ``async_dispatch`` default to the §Perf flags
+    (``embed_dtype`` / ``embed_donate`` / ``embed_async``), so a
+    default-constructed backend is the paper-faithful fp32 synchronous
+    baseline and every optimization is a reproducible baseline-vs-change
+    row.  Counters are inherited from the bucketed backend (``traces``,
+    ``bucket_hits``, ``real_tokens``/``padded_tokens``, ``truncated``).
+    """
+
+    def __init__(self, cfg, params, max_tokens: int = 128, *,
+                 mesh=None, devices=None,
+                 dtype: Optional[str] = None,
+                 donate: Optional[bool] = None,
+                 async_dispatch: Optional[bool] = None,
+                 min_seq_bucket: int = 16, min_batch_bucket: int = 1,
+                 staging_slots: int = 4,
+                 telemetry: Optional[Telemetry] = None,
+                 prewarm_buckets: Sequence[Tuple[int, int]] = ()):
+        import jax
+        import jax.numpy as jnp
+
+        from repro import perf_flags
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import embedder
+        from repro.parallel.sharding import dp_axes, serve_embed_shardings
+
+        flags = perf_flags.FLAGS
+        dtype = flags.embed_dtype if dtype is None else dtype
+        if dtype not in ("fp32", "bf16"):
+            raise ValueError(f"embed dtype must be fp32|bf16, got {dtype!r}")
+        donate = flags.embed_donate if donate is None else bool(donate)
+        self.async_dispatch = (flags.embed_async if async_dispatch is None
+                               else bool(async_dispatch))
+        if mesh is None:
+            mesh = make_serve_mesh(_serve_devices(devices))
+        self.mesh = mesh
+        ndev = 1
+        for a in dp_axes(mesh):
+            ndev *= mesh.shape[a]
+        if ndev != next_pow2(ndev):
+            raise ValueError(f"data-parallel mesh size must be a power of "
+                             f"two, got {ndev}")
+        self.device_count = ndev
+        self.donate = donate
+        self.serve_dtype = jnp.bfloat16 if dtype == "bf16" else jnp.float32
+
+        # the parent wires counters, telemetry and the bucket planner; its
+        # single-device jit is replaced below, before anything compiles
+        # batch buckets must divide the data axis: floor the bucket at the
+        # mesh size and keep it a power of two
+        super().__init__(cfg, params, max_tokens,
+                         min_seq_bucket=min_seq_bucket,
+                         min_batch_bucket=max(next_pow2(min_batch_bucket),
+                                              ndev),
+                         telemetry=telemetry)
+        self.name = (f"jax-sharded/{cfg.name}@{ndev}dev/{dtype}"
+                     + ("+donate" if donate else "")
+                     + ("+async" if self.async_dispatch else ""))
+
+        # (a) weights cast ONCE at load and laid out resident on the mesh
+        served = jax.tree.map(lambda x: x.astype(self.serve_dtype), params)
+        psh, bsh = serve_embed_shardings(
+            mesh, jax.eval_shape(lambda: served))
+        self.params = jax.device_put(served, psh)
+        self._batch_sharding = bsh
+
+        cdt = self.serve_dtype
+
+        def _fn(p, toks, mask):
+            self.traces += 1          # python side effect: runs once per trace
+            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt)
+
+        # (b) donate the per-batch token/mask device buffers; on a backend
+        # where donation is unimplemented (this CPU container) the
+        # "not usable" warning is pure noise, so it is filtered ONCE and
+        # only there — on TPU/GPU a donation diagnostic stays visible
+        jit_kw = {}
+        if donate:
+            jit_kw["donate_argnums"] = (1, 2)
+            if jax.default_backend() == "cpu":
+                _filter_cpu_donation_warning()
+        self._embed = jax.jit(_fn, in_shardings=(psh, bsh, bsh),
+                              out_shardings=bsh, **jit_kw)
+        self._jax = jax
+
+        # reusable pinned host staging arrays: a small RING of pairs per
+        # (B, S) bucket.  ``device_put`` may defer (or, for large aligned
+        # arrays, zero-copy alias) the host buffer, so a slot must not be
+        # refilled while an enqueued execution can still read it.  The
+        # default depth covers the worker's double-buffering discipline (at
+        # most 2 undelivered batches per worker) for up to 2 workers;
+        # callers sharing one backend across more workers, or holding more
+        # fetches back, must raise ``staging_slots`` to 2 x workers.
+        # Steady-state host allocation stays bounded at ``staging_slots``
+        # pairs per live bucket.
+        self._staging_slots = max(2, int(staging_slots))
+        self._staging: dict = {}        # (bb, sb) -> list[(toks, mask)]
+        self._staging_use: dict = {}    # (bb, sb) -> fills so far
+        self._staging_lock = threading.Lock()
+
+        if prewarm_buckets:
+            self.prewarm(prewarm_buckets)
+
+    # ------------------------------------------------------------------
+    def warm_grid(self, max_batch: int) -> List[Tuple[int, int]]:
+        """The enumerable (B, S) grid this backend serves ``max_batch`` with
+        (batch buckets floored at the mesh size) — feed to ``prewarm``."""
+        return default_buckets(max(max_batch, self.min_batch_bucket),
+                               self.max_tokens, self.min_seq_bucket,
+                               self.min_batch_bucket)
+
+    def _stage_chunk(self, chunk: Sequence[Query], bb: int, sb: int):
+        """Tokenize into the (bb, sb) bucket's next staging slot and ship it
+        to the mesh.  The slot rotates through the ring so a buffer is only
+        refilled ``staging_slots`` batches later — by which point the
+        double-buffered worker has fetched (hence the device has consumed)
+        the execution that read it.  The lock covers slot pick + fill +
+        transfer, so worker threads can share one backend (raise
+        ``staging_slots`` beyond 2 workers)."""
+        key = (bb, sb)
+        with self._staging_lock:
+            ring = self._staging.setdefault(key, [])
+            use = self._staging_use.get(key, 0)
+            self._staging_use[key] = use + 1
+            if len(ring) < self._staging_slots:
+                ring.append((np.zeros((bb, sb), np.int32),
+                             np.zeros((bb, sb), np.float32)))
+            out = ring[use % len(ring)]
+            toks, mask, real, truncated = self._tokenize(chunk, sb, out=out)
+            td = self._jax.device_put(toks, self._batch_sharding)
+            md = self._jax.device_put(mask, self._batch_sharding)
+        return td, md, real, truncated
+
+    def embed_batch_async(self, queries: Sequence[Query]
+                          ) -> Callable[[], List[np.ndarray]]:
+        """Enqueue every chunk of the batch; returns the deferred fetch.
+
+        (c) async dispatch: jit calls return as soon as the computation is
+        enqueued, so this method costs staging + dispatch only (the shared
+        chunking/accounting path in ``BucketedEmbedderBackend
+        ._enqueue_chunks``).  The fetch thunk performs the blocking
+        device->host copy — the engine worker calls it one batch late
+        (double buffering) so the copy overlaps the next batch's compute.
+        """
+        handles = self._enqueue_chunks(queries)
+
+        def fetch() -> List[np.ndarray]:
+            out: List[np.ndarray] = []
+            for n, dev in handles:
+                arr = np.asarray(dev)     # blocks until ready; gathers shards
+                out.extend(arr[i] for i in range(n))
+            return out
+
+        return fetch

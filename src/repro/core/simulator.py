@@ -198,6 +198,7 @@ class ServingSimulator:
                 return
             dur = models[tier].latency(len(batch),
                                        max(q.length for q in batch), self.rng)
+            res.record_batch(tier, dur)   # same tail metric as the engine
             done = now + dur
             free_at[tier] = done
             heapq.heappush(events, (done, 0, nseq(), "done", (tier, batch)))

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
 
@@ -43,6 +43,8 @@ class Telemetry:
     per_device: Dict[str, int] = field(default_factory=dict)
     completed: List["Query"] = field(default_factory=list)
     latencies: List[float] = field(default_factory=list)
+    batch_latencies: List[float] = field(default_factory=list)
+    tier_batch_latencies: Dict[str, List[float]] = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
@@ -62,6 +64,17 @@ class Telemetry:
         if n:
             with self._lock:
                 self.truncated += n
+
+    def record_batch(self, tier: str, service_s: float) -> None:
+        """One batch execution's service latency (enqueue -> results ready).
+        Both drivers report it, so tail service latency (``batch_p``) is a
+        first-class metric next to per-query e2e latency — means hide the
+        p99 stalls that actually break the SLO contract.  Kept per tier as
+        well: a modeled NPU tier and a real CPU tier have very different
+        distributions, and mixing them would mask a tail regression."""
+        with self._lock:
+            self.batch_latencies.append(service_s)
+            self.tier_batch_latencies.setdefault(tier, []).append(service_s)
 
     def record_completion(self, query: "Query", tier: str) -> None:
         """The driver sets ``query.done_t`` first; latency is derived."""
@@ -107,6 +120,13 @@ class Telemetry:
     def p(self, q: float) -> float:
         return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
 
+    def batch_p(self, q: float, tier: Optional[str] = None) -> float:
+        """Percentile of per-batch service latency (seconds); ``tier``
+        restricts to one device pool's batches."""
+        lats = self.batch_latencies if tier is None else \
+            self.tier_batch_latencies.get(tier, [])
+        return float(np.percentile(lats, q)) if lats else 0.0
+
     def throughput(self, window_s: float) -> float:
         return self.accepted / window_s if window_s > 0 else 0.0
 
@@ -122,6 +142,11 @@ class Telemetry:
             "truncated": self.truncated,
             "p50_s": self.p(50),
             "p99_s": self.p(99),
+            "batch_p50_s": self.batch_p(50),
+            "batch_p95_s": self.batch_p(95),
+            "batch_p99_s": self.batch_p(99),
+            **{f"batch_p95_{k}": self.batch_p(95, k)
+               for k in sorted(self.tier_batch_latencies)},
             **{f"dispatched_{k}": v for k, v in sorted(self.dispatched.items())},
             **{f"completed_{k}": v for k, v in sorted(self.per_device.items())},
         }

@@ -51,9 +51,19 @@ class Backend:
 
     name = "backend"
     telemetry: Optional[Telemetry] = None
+    # backends that can enqueue a batch and hand back a deferred fetch set
+    # this True and implement ``embed_batch_async`` (see
+    # ``repro.core.sharded_backend``); the engine worker then double-buffers.
+    async_dispatch = False
 
     def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
         raise NotImplementedError
+
+    def embed_batch_async(self, queries: Sequence[Query]
+                          ) -> Callable[[], List[np.ndarray]]:
+        """Enqueue the batch; the returned thunk blocks for the results."""
+        out = self.embed_batch(queries)
+        return lambda: out
 
 
 class ModeledBackend(Backend):
@@ -106,16 +116,27 @@ class JaxEmbedderBackend(Backend):
         self._embed = jax.jit(_fn)
         self._jnp = jnp
 
-    def _tokenize(self, queries: Sequence[Query], seq_len: int):
+    def _tokenize(self, queries: Sequence[Query], seq_len: int, out=None):
         """Pad/truncate a batch into (tokens, mask) of width ``seq_len``.
 
         Returns (toks, mask, real_tokens, truncated).  Queries without a
         payload get the deterministic synthetic token stream, so modeled and
         real runs embed identical inputs.
+
+        ``out``: optional reusable ``(toks, mask)`` staging arrays with at
+        least ``len(queries)`` rows and exactly ``seq_len`` columns — the
+        sharded backend keeps one pair per (B, S) bucket so steady-state
+        serving stops allocating fresh host arrays per batch.  Padding rows
+        beyond the batch are zeroed (all-zero mask == dropped by pooling).
         """
         B = len(queries)
-        toks = np.zeros((B, seq_len), np.int32)
-        mask = np.zeros((B, seq_len), np.float32)
+        if out is None:
+            toks = np.zeros((B, seq_len), np.int32)
+            mask = np.zeros((B, seq_len), np.float32)
+        else:
+            toks, mask = out
+            toks[:] = 0
+            mask[:] = 0.0
         real = 0
         truncated = 0
         for i, q in enumerate(queries):
@@ -262,20 +283,22 @@ class WindVE:
     def _worker(self, tier_name: str) -> None:
         backend = self.backends[tier_name]
         queue = self.qm.queues[tier_name]
-        while not self._stop.is_set():
-            # live values: online re-calibration may resize the depth;
-            # qm.pop_batch honours the tier's bucket_fn (length-aware batches)
-            batch = self.qm.pop_batch(tier_name)
-            if not batch:
-                self._wake[tier_name].wait(timeout=0.01)
-                self._wake[tier_name].clear()
-                continue
-            t0 = time.monotonic()
+        use_async = bool(getattr(backend, "async_dispatch", False)) and \
+            callable(getattr(backend, "embed_batch_async", None))
+        # double buffering (async backends): the previous batch's fetch is
+        # deferred until the NEXT batch is enqueued, so device->host copy of
+        # batch N-1 overlaps batch N's compute and the worker never idles on
+        # ``device_get``.
+        pending = None   # (batch, fetch_thunk, t0)
+
+        def resolve(entry) -> None:
+            batch, fetch, t0 = entry
             try:
-                embs = backend.embed_batch(batch)
+                embs = fetch()
             except Exception as e:  # pragma: no cover
                 embs = [e] * len(batch)
             service = time.monotonic() - t0
+            self.stats.record_batch(tier_name, service)
             now = time.monotonic()
             for q, emb in zip(batch, embs):
                 q.done_t = now
@@ -292,6 +315,32 @@ class WindVE:
                     hook(tier_name, batch, service)
                 except Exception:  # pragma: no cover - hooks must not kill
                     pass           # the worker loop
+
+        while not self._stop.is_set():
+            # live values: online re-calibration may resize the depth;
+            # qm.pop_batch honours the tier's bucket_fn (length-aware batches)
+            batch = self.qm.pop_batch(tier_name)
+            if not batch:
+                if pending is not None:   # drain: nothing left to overlap
+                    resolve(pending)
+                    pending = None
+                    continue
+                self._wake[tier_name].wait(timeout=0.01)
+                self._wake[tier_name].clear()
+                continue
+            t0 = time.monotonic()
+            if use_async:
+                try:
+                    fetch = backend.embed_batch_async(batch)
+                except Exception as e:
+                    fetch = (lambda err=e, n=len(batch): [err] * n)
+                prev, pending = pending, (batch, fetch, t0)
+                if prev is not None:
+                    resolve(prev)
+            else:
+                resolve((batch, (lambda b=batch: backend.embed_batch(b)), t0))
+        if pending is not None:   # pragma: no cover - shutdown mid-flight
+            resolve(pending)
 
     def shutdown(self) -> None:
         self._stop.set()

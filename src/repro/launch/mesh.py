@@ -19,14 +19,16 @@ except ImportError:          # older jax: no AxisType / axis_types kwarg
     AxisType = None
 
 
-def _mesh(shape, axes):
+def _mesh(shape, axes, devices=None):
+    kw = {} if devices is None else {"devices": devices}
     if AxisType is not None:
         try:
             return jax.make_mesh(shape, axes,
-                                 axis_types=(AxisType.Auto,) * len(axes))
+                                 axis_types=(AxisType.Auto,) * len(axes),
+                                 **kw)
         except TypeError:    # AxisType exists but make_mesh predates kwarg
             pass
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -39,6 +41,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests / the real serving engine."""
     return _mesh((1, 1), ("data", "model"))
+
+
+def make_serve_mesh(devices=None):
+    """Data-parallel serving mesh over this host's local devices.
+
+    One embedding tier fans its batches out over every device it was given
+    (``('data', 'model')`` axes with the whole device count on ``data``), so
+    the serve-mode sharding rules in ``repro.parallel.sharding`` apply
+    unchanged: weights resident/replicated, batch sharded over ``data``.
+    ``devices=None`` uses all local devices; a single device degrades to
+    ``make_host_mesh()`` behaviour.
+    """
+    devices = list(jax.local_devices() if devices is None else devices)
+    if not devices:
+        raise ValueError("need at least one device for a serve mesh")
+    return _mesh((len(devices), 1), ("data", "model"), devices=devices)
 
 
 def mesh_context(mesh):

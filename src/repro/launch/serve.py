@@ -4,7 +4,13 @@ Device detector -> estimator calibration (profiling the REAL local JAX
 embedder for the CPU pool and the paper-calibrated model for the NPU pool)
 -> queue manager -> threaded engine -> workload replay -> stats.
 
-    PYTHONPATH=src python -m repro.launch.serve --queries 64 --slo 1.0
+The real embedding pool runs the device-sharded backend
+(``repro.core.sharded_backend``): one tier fans its bucketed batches out
+over every local device (a single-device host degrades to the PR 2 bucketed
+path), and the §Perf serving flags select the optimized rows::
+
+    PYTHONPATH=src python -m repro.launch.serve --queries 64 --slo 1.0 \
+        --opt embed_dtype=bf16,embed_donate=1,embed_async=1 --prewarm
 """
 from __future__ import annotations
 
@@ -14,13 +20,16 @@ import time
 import jax
 import numpy as np
 
+from repro import perf_flags
 from repro.configs import get_config
+from repro.core.bucketing import length_bucket_fn
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import estimate_depth
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, TierSpec)
+from repro.core.sharded_backend import ShardedEmbedderBackend
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
-from repro.core.windve import JaxEmbedderBackend, ModeledBackend, WindVE
+from repro.core.windve import ModeledBackend, WindVE
 from repro.data.workload import make_queries
 from repro.models import embedder
 
@@ -30,11 +39,15 @@ POLICIES = {
     "least-loaded": LeastLoadedPolicy,
 }
 
+MAX_TOKENS = 96
+MIN_SEQ_BUCKET = 16
+
 
 def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                  smoke: bool = True, heter: bool = True,
                  npu_model: str = "tesla-v100/bge", seed: int = 0,
-                 policy: str = "cascade"):
+                 policy: str = "cascade", devices: int = 0,
+                 prewarm: bool = False):
     cfg = get_config(model)
     if smoke:
         cfg = cfg.smoke()
@@ -46,7 +59,18 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
 
     npu_dev = PAPER_DEVICES[npu_model]
     npu_be = ModeledBackend(npu_dev, embed_dim=cfg.d_model)
-    cpu_be = JaxEmbedderBackend(cfg, params, max_tokens=96)
+    # the real pool: one tier fans out over the local device mesh; dtype /
+    # donation / async dispatch follow the embed_* §Perf flags
+    local = jax.local_devices()
+    cpu_be = ShardedEmbedderBackend(
+        cfg, params, max_tokens=MAX_TOKENS,
+        devices=local[:devices] if devices else None,
+        min_seq_bucket=MIN_SEQ_BUCKET)
+    print(f"[serve] embed pool: {cpu_be.name} "
+          f"(mesh fan-out over {cpu_be.device_count}/{len(local)} devices)")
+    if prewarm:
+        n = cpu_be.prewarm(cpu_be.warm_grid(max_batch=16))
+        print(f"[serve] prewarmed {n} (B, S) buckets — zero compile stalls")
 
     # --- §4.2.2: calibrate queue depths with the linear-regression estimator
     d_npu, fit_n = estimate_depth(profile_fn_for(npu_dev), slo)
@@ -59,7 +83,14 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         cpu_be.embed_batch(batch)
         return time.monotonic() - t0
 
-    d_cpu, fit_c = (estimate_depth(profile_cpu, slo, probe_points=(1, 2, 4, 8))
+    # probe at multiples of the backend's batch-bucket floor: on an N-device
+    # mesh every batch pads up to at least N rows, so probing (1, 2, 4, 8)
+    # raw would execute ONE identical shape four times, fit a flat line and
+    # return the estimator's unbounded-depth sentinel
+    base = max(1, cpu_be.min_batch_bucket)
+    d_cpu, fit_c = (estimate_depth(profile_cpu, slo,
+                                   probe_points=tuple(base * c
+                                                      for c in (1, 2, 4, 8)))
                     if det.heter_enable else (0, None))
     d_npu, d_cpu = max(d_npu, 1), max(d_cpu, 0)
     print(f"[serve] depths: C_NPU={d_npu} (a={fit_n.alpha:.4f} b={fit_n.beta:.3f}) "
@@ -69,7 +100,9 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
     # rewrite (e.g. append a little-core CPU pool here)
     tiers = [TierSpec(NPU, d_npu, backend=npu_be)]
     if det.heter_enable and d_cpu > 0:
-        tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be))
+        tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be,
+                              bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
+                                                         MAX_TOKENS)))
     engine = WindVE(tiers=tiers, policy=POLICIES[policy]())
     return engine, cfg
 
@@ -84,10 +117,19 @@ def main() -> None:
                     help="disable CPU offloading (the paper's baseline)")
     ap.add_argument("--policy", default="cascade", choices=sorted(POLICIES),
                     help="dispatch policy (cascade == paper Algorithm 1)")
+    ap.add_argument("--opt", default="",
+                    help="perf flags, e.g. embed_dtype=bf16,embed_async=1")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="devices the embed tier fans out over (0 = all)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile the (B, S) bucket grid before serving")
     args = ap.parse_args()
 
+    if args.opt:
+        perf_flags.set_flags(**perf_flags.parse_opt(args.opt))
     engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter,
-                               policy=args.policy)
+                               policy=args.policy, devices=args.devices,
+                               prewarm=args.prewarm)
     queries = make_queries(args.queries, cfg.vocab_size, args.length)
     t0 = time.monotonic()
     futs = [engine.submit(payload=q, length=args.length) for q in queries]
@@ -101,6 +143,12 @@ def main() -> None:
           f"p50={s.p(50):.3f}s p99={s.p(99):.3f}s  "
           f"SLO({args.slo}s) violations="
           f"{sum(1 for l in s.latencies if l > args.slo)}")
+    tails = "  ".join(
+        f"{t}: p95={s.batch_p(95, t)*1e3:.1f}ms"
+        for t in sorted(s.tier_batch_latencies))
+    print(f"[serve] batch service tail: p50={s.batch_p(50)*1e3:.1f}ms "
+          f"p95={s.batch_p(95)*1e3:.1f}ms p99={s.batch_p(99)*1e3:.1f}ms "
+          f"over {len(s.batch_latencies)} batches  [{tails}]")
     print(f"[serve] max concurrency C = {engine.max_concurrency}")
     engine.shutdown()
 

@@ -41,7 +41,8 @@ def init_embedder(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
-          mask: jax.Array | None = None) -> jax.Array:
+          mask: jax.Array | None = None, *,
+          compute_dtype: Any = None) -> jax.Array:
     """tokens: (B, S) int32; mask: (B, S) 1=real token.  Returns (B, embed_dim)
     L2-normalised embeddings (the paper's 1024-d fp32 output vector).
 
@@ -51,11 +52,20 @@ def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
     the shape-bucketed backend (``repro.core.bucketing``) pad to the bucket
     instead of the global max and still serve identical vectors.  The
     pooling + L2-normalise epilogue runs through the fused
-    ``repro.kernels.pool_norm`` op (Pallas kernel on TPU, jnp oracle here).
+    ``repro.kernels.pool_norm`` op (Pallas kernel on TPU, jnp oracle here)
+    and accumulates in fp32 for ANY compute dtype, so served vectors are
+    always fp32 unit vectors.
+
+    ``compute_dtype`` pins the trunk's activation dtype (every weight is cast
+    to the activation dtype at use, see ``models.layers``): the serving
+    backends pass ``jnp.float32`` for the precision oracle and
+    ``jnp.bfloat16`` for bf16-resident serving; None keeps the global
+    ``layers.COMPUTE_DTYPE`` default.
     """
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
-    h = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    cdt = L.COMPUTE_DTYPE if compute_dtype is None else compute_dtype
+    h = params["embed"][tokens].astype(cdt)
     h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
     kv_mask = mask          # None -> every position is a real token
 

@@ -63,6 +63,20 @@ class PerfFlags:
     # "dots" (save no-batch-dim dot outputs, i.e. the weight-matmul
     # activations; recompute only the cheap elementwise/attention math).
     remat_policy: str = "full"
+    # embedding serving precision: "fp32" (baseline oracle: fp32-resident
+    # weights, fp32 trunk) or "bf16" (weights cast ONCE at load, all matmuls
+    # bf16; the pool_norm epilogue always accumulates fp32 so served vectors
+    # stay fp32 unit vectors within 1e-2 cosine of the oracle).
+    embed_dtype: str = "fp32"
+    # embedding serving: donate the token/mask device buffers to the jit'd
+    # embed (jit donate_argnums) so XLA reuses them instead of allocating
+    # fresh HBM per batch.  No-op (with the warning suppressed) on backends
+    # that cannot alias, e.g. this CPU container.
+    embed_donate: bool = False
+    # embedding serving: enqueue the embed and return a fetch handle so the
+    # engine worker overlaps batch N's compute with batch N-1's
+    # device->host fetch (double buffering) instead of blocking per batch.
+    embed_async: bool = False
 
 
 FLAGS = PerfFlags()
@@ -85,6 +99,9 @@ def parse_opt(spec: str) -> dict:
     for part in filter(None, spec.split(",")):
         k, _, v = part.partition("=")
         k = k.strip()
+        if k not in PerfFlags.__dataclass_fields__:
+            valid = ", ".join(sorted(PerfFlags.__dataclass_fields__))
+            raise ValueError(f"unknown perf flag {k!r}; valid flags: {valid}")
         field = PerfFlags.__dataclass_fields__[k]
         if field.type in ("int", int):
             out[k] = int(v)

@@ -123,3 +123,21 @@ def test_parse_opt_roundtrip():
                               "remat_policy=dots,serve_tp_only=0")
     assert kw == {"mamba_chunk": 32, "attn_band_skip": True,
                   "remat_policy": "dots", "serve_tp_only": False}
+
+
+def test_parse_opt_embed_serving_flags():
+    kw = perf_flags.parse_opt("embed_dtype=bf16,embed_donate=1,embed_async=0")
+    assert kw == {"embed_dtype": "bf16", "embed_donate": True,
+                  "embed_async": False}
+    flags = perf_flags.set_flags(**kw)
+    assert flags.embed_dtype == "bf16" and flags.embed_donate
+    perf_flags.reset_flags()
+    assert perf_flags.FLAGS.embed_dtype == "fp32"   # baseline oracle
+
+
+def test_parse_opt_unknown_flag_lists_valid_names():
+    with pytest.raises(ValueError) as ei:
+        perf_flags.parse_opt("mamba_chunk=16,no_such_flag=1")
+    msg = str(ei.value)
+    assert "no_such_flag" in msg
+    assert "mamba_chunk" in msg and "embed_dtype" in msg  # lists valid flags
