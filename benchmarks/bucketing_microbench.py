@@ -25,7 +25,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, emit
+from benchmarks.common import Row, emit, write_bench_json
 from repro.core.bucketing import (BucketedEmbedderBackend, default_buckets,
                                   length_bucket_fn)
 from repro.core.routing import NPU, Query, QueueManager, TierSpec
@@ -146,6 +146,18 @@ def run() -> list[Row]:
     diff = float(np.abs(a - b).max())
     rows.append(("bucketing/equality", 0.0,
                  f"max|bucketed-fixed|={diff:.2e} (<=1e-5 required)"))
+
+    write_bench_json("bucketing", rows, metrics={
+        "padded_waste_fixed": fixed.padded_waste,
+        "padded_waste_bucketed": bucketed.padded_waste,
+        "waste_reduction": reduction,
+        "serving_retraces_fixed": fixed_retraces,
+        "serving_retraces_bucketed": bucketed_retraces,
+        "warm_qps_fixed": n / max(t_fixed, 1e-9),
+        "warm_qps_bucketed": n / max(t_buck, 1e-9),
+        "warm_speedup": t_fixed / max(t_buck, 1e-9),
+        "equality_max_abs_diff": diff,
+    })
 
     # regression guards — benchmarks.run turns a raise into exit code 1
     assert reduction >= 2.0, \

@@ -1,8 +1,9 @@
 """Shared benchmark helpers: timing + the paper's device/depth recipes."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.estimator import fine_tune_depth, stress_test_depth
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
@@ -38,3 +39,27 @@ def finetuned_depths(npu_key: str, cpu_key: str, slo: float,
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(name: str, rows: List[Row],
+                     metrics: Optional[Dict[str, float]] = None,
+                     path: Optional[str] = None) -> str:
+    """Dump a microbench run as machine-readable ``BENCH_<name>.json``.
+
+    ``metrics`` carries the headline scalars (throughput q/s, p95 seconds,
+    parity cosine, speedups ...) so the perf trajectory can be diffed
+    across PRs by tooling instead of scraped out of log text; ``rows`` are
+    the human CSV rows verbatim.  CI archives these files per run.
+    """
+    payload = {
+        "bench": name,
+        "metrics": {k: (float(v) if isinstance(v, (int, float)) else v)
+                    for k, v in (metrics or {}).items()},
+        "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
+                 for n, us, d in rows],
+    }
+    out = path or f"BENCH_{name}.json"
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return out

@@ -13,7 +13,9 @@ import argparse
 import os
 import sys
 
-from benchmarks.common import Row, emit, time_us
+from benchmarks.common import Row, emit, time_us, write_bench_json
+
+
 def run(devices: int = 1) -> list[Row]:
     import jax
 
@@ -41,6 +43,8 @@ def run(devices: int = 1) -> list[Row]:
                      time_us(dispatch, repeats=2000),
                      "per-query routing cost (cascade == Algorithm 1)"))
 
+    metrics = {}
+
     # real embedder: measured t(C) linearity on this host CPU
     cfg = get_config("bge-large-zh-v1.5").smoke()
     params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
@@ -63,6 +67,9 @@ def run(devices: int = 1) -> list[Row]:
     rows.append(("engine/jax-embedder-batch16", lats[-1] / 16 * 1e6,
                  f"measured Eq.12 fit: alpha={fit.alpha*1e3:.2f}ms "
                  f"beta={fit.beta*1e3:.2f}ms r2={fit.r2:.3f}"))
+    metrics.update(embed_qps_batch16=16.0 / lats[-1],
+                   eq12_alpha_s=fit.alpha, eq12_beta_s=fit.beta,
+                   eq12_r2=fit.r2)
 
     # sharded fan-out: the same curve through the device-sharded backend
     # (batch over the mesh's data axis); on one device this IS the bucketed
@@ -94,6 +101,11 @@ def run(devices: int = 1) -> list[Row]:
                      slats[-1] / scs[-1] * 1e6,
                      f"measured Eq.12 fit: alpha={sfit.alpha*1e3:.2f}ms "
                      f"beta={sfit.beta*1e3:.2f}ms r2={sfit.r2:.3f}"))
+        metrics.update(sharded_devices=ndev,
+                       sharded_qps=scs[-1] / slats[-1],
+                       sharded_eq12_alpha_s=sfit.alpha,
+                       sharded_eq12_beta_s=sfit.beta)
+    write_bench_json("engine", rows, metrics=metrics)
     return rows
 
 

@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.engine_microbench",  # real engine on this host
     "benchmarks.bucketing_microbench",  # shape bucketing vs fixed padding
     "benchmarks.sharded_embed_microbench",  # device mesh fan-out + bf16
+    "benchmarks.quant_embed_microbench",    # int8 weight-only CPU tier
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 

@@ -32,7 +32,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, emit
+from benchmarks.common import Row, emit, write_bench_json
 
 DEFAULT_DEVICES = 8
 MAX_TOKENS = 64
@@ -167,6 +167,15 @@ def run(smoke: bool = False) -> list[Row]:
                  f"enqueue {t_enq*1e3:.2f}ms vs {t_tot*1e3:.2f}ms to "
                  f"results: worker overlaps the gap (donate="
                  f"{beN.donate})"))
+
+    write_bench_json("sharded_embed", rows, metrics={
+        "devices": ndev, "cores": cores, "qps_1dev": qps1,
+        "qps_ndev": qpsN, "scaling_speedup": speedup,
+        "scaling_bar": required, "serving_retraces": serving_retraces,
+        "bf16_cosine_distance_max": cos_max,
+        "staging_pairs": staged, "staging_buckets": used,
+        "async_enqueue_s": t_enq, "async_total_s": t_tot,
+    })
 
     # regression guards — benchmarks.run turns a raise into exit code 1
     assert speedup >= required, \

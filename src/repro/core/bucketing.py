@@ -102,9 +102,12 @@ class BucketedEmbedderBackend(JaxEmbedderBackend):
     def __init__(self, cfg, params, max_tokens: int = 128, *,
                  min_seq_bucket: int = 16, min_batch_bucket: int = 1,
                  telemetry: Telemetry | None = None,
+                 dtype: str | None = None,
                  prewarm_buckets: Sequence[Tuple[int, int]] = ()):
-        super().__init__(cfg, params, max_tokens, telemetry=telemetry)
-        self.name = f"jax-cpu-bucketed/{cfg.name}"
+        super().__init__(cfg, params, max_tokens, telemetry=telemetry,
+                         dtype=dtype)
+        self.name = (f"jax-cpu-bucketed/{cfg.name}"
+                     + (f"/{dtype}" if dtype else ""))
         self.min_seq_bucket = min_seq_bucket
         self.min_batch_bucket = min_batch_bucket
         self.bucket_hits = 0

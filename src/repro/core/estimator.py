@@ -16,7 +16,7 @@ against, so Table 3 can be reproduced with both methods.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -70,6 +70,27 @@ def estimate_depth(profile_fn: Callable[[int], float], slo_s: float,
     pts = [(c, profile_fn(c)) for c in probe_points]
     fit = fit_latency([p[0] for p in pts], [p[1] for p in pts])
     return fit.max_concurrency(slo_s), fit
+
+
+def estimate_depth_per_bucket(
+        profile_fn: Callable[[int, int], float], slo_s: float,
+        bucket_lengths: Sequence[int],
+        probe_points: Sequence[int] = (1, 4, 16, 64),
+) -> Dict[int, Tuple[int, LatencyFit]]:
+    """One Eq. 12 fit PER seq-length bucket: ``{bucket: (depth, fit)}``.
+
+    ``profile_fn(concurrency, length)`` measures one batch at one padded
+    length.  A single global fit averages the paper's Fig. 5 structure
+    away — a bucketed (and quantized) CPU tier serves a 16-token bucket
+    several times faster than a 96-token one, so its SLO-safe depth is a
+    per-bucket quantity.  Feed the result to
+    ``repro.core.routing.LengthAwarePolicy.from_bucket_depths`` so the
+    dispatch threshold follows the measured service curve instead of a
+    hand-picked constant.
+    """
+    return {int(b): estimate_depth(lambda c: profile_fn(c, int(b)), slo_s,
+                                   probe_points)
+            for b in bucket_lengths}
 
 
 def stress_test_depth(profile_fn: Callable[[int], float], slo_s: float,

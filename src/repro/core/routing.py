@@ -189,6 +189,36 @@ class LengthAwarePolicy(DispatchPolicy):
         self.long_threshold = long_threshold
         self.fast_tiers = fast_tiers
 
+    @classmethod
+    def from_bucket_depths(cls, bucket_depths: Dict[int, int],
+                           fast_tiers: int = 1) -> "LengthAwarePolicy":
+        """Derive the long-query threshold from measured per-bucket depths.
+
+        ``bucket_depths`` maps a seq-length bucket to its SLO-safe slow-tier
+        depth (one Eq. 12 fit per bucket — see
+        ``repro.core.estimator.estimate_depth_per_bucket``).  Queries round
+        UP into their bucket (``bucketing.bucket_length``), so the first
+        bucket whose depth collapsed to 0 (the paper's Eq. 11 "CPU cannot
+        be used" case, observed per bucket instead of assumed at a fixed
+        length) poisons every length ABOVE the previous live bucket — the
+        threshold is that lower boundary, not the dead bucket's own padded
+        length.  If every profiled bucket still has capacity, anything
+        beyond the profiled range counts as long — unprofiled lengths must
+        not be routed onto the slow tier on faith.
+        """
+        if not bucket_depths:
+            raise ValueError("need at least one bucket depth")
+        buckets = sorted(bucket_depths)
+        dead = [b for b in buckets if bucket_depths[b] <= 0]
+        if not dead:
+            threshold = buckets[-1] + 1
+        else:
+            prev = [b for b in buckets if b < dead[0]]
+            # smallest profiled bucket dead -> every length pads into a
+            # dead bucket, so every query is long (threshold must stay > 0)
+            threshold = prev[-1] + 1 if prev else 1
+        return cls(long_threshold=threshold, fast_tiers=fast_tiers)
+
     def candidates(self, query, tiers, qm):
         if query.length >= self.long_threshold:
             return [t.name for t in tiers[:self.fast_tiers]]

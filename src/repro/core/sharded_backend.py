@@ -80,8 +80,13 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
     (``embed_dtype`` / ``embed_donate`` / ``embed_async``), so a
     default-constructed backend is the paper-faithful fp32 synchronous
     baseline and every optimization is a reproducible baseline-vs-change
-    row.  Counters are inherited from the bucketed backend (``traces``,
-    ``bucket_hits``, ``real_tokens``/``padded_tokens``, ``truncated``).
+    row.  ``dtype`` policies (``repro.models.quantize.serve_params``):
+    ``fp32`` oracle, ``bf16`` resident weights, or ``int8`` weight-only
+    quantized projections (int8 weights + fp32 dequant scales, fp32
+    activations, the fused quant matmul in the trunk; served vectors stay
+    fp32 unit vectors within 1e-2 cosine of the oracle).  Counters are
+    inherited from the bucketed backend (``traces``, ``bucket_hits``,
+    ``real_tokens``/``padded_tokens``, ``truncated``).
     """
 
     def __init__(self, cfg, params, max_tokens: int = 128, *,
@@ -94,17 +99,19 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
                  telemetry: Optional[Telemetry] = None,
                  prewarm_buckets: Sequence[Tuple[int, int]] = ()):
         import jax
-        import jax.numpy as jnp
 
         from repro import perf_flags
         from repro.launch.mesh import make_serve_mesh
         from repro.models import embedder
+        from repro.models.quantize import serve_params
         from repro.parallel.sharding import dp_axes, serve_embed_shardings
 
         flags = perf_flags.FLAGS
         dtype = flags.embed_dtype if dtype is None else dtype
-        if dtype not in ("fp32", "bf16"):
-            raise ValueError(f"embed dtype must be fp32|bf16, got {dtype!r}")
+        # realise the serving precision policy ONCE at load: fp32 oracle,
+        # bf16-resident weights, or int8 weight-only quantized projections
+        # (validates dtype and raises a ValueError listing the policies)
+        served, cdt = serve_params(params, dtype)
         donate = flags.embed_donate if donate is None else bool(donate)
         self.async_dispatch = (flags.embed_async if async_dispatch is None
                                else bool(async_dispatch))
@@ -119,7 +126,6 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
                              f"two, got {ndev}")
         self.device_count = ndev
         self.donate = donate
-        self.serve_dtype = jnp.bfloat16 if dtype == "bf16" else jnp.float32
 
         # the parent wires counters, telemetry and the bucket planner; its
         # single-device jit is replaced below, before anything compiles
@@ -130,18 +136,20 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
                          min_batch_bucket=max(next_pow2(min_batch_bucket),
                                               ndev),
                          telemetry=telemetry)
+        self.dtype = dtype
+        # the trunk's ACTIVATION dtype: weight-only int8 keeps fp32
+        # activations, so quantization error enters via the weights alone
+        self.serve_dtype = cdt
         self.name = (f"jax-sharded/{cfg.name}@{ndev}dev/{dtype}"
                      + ("+donate" if donate else "")
                      + ("+async" if self.async_dispatch else ""))
 
-        # (a) weights cast ONCE at load and laid out resident on the mesh
-        served = jax.tree.map(lambda x: x.astype(self.serve_dtype), params)
+        # (a) weights realised ONCE at load (cast / quantized) and laid out
+        # resident on the mesh; dequant scales ride the tree as fp32 leaves
         psh, bsh = serve_embed_shardings(
             mesh, jax.eval_shape(lambda: served))
         self.params = jax.device_put(served, psh)
         self._batch_sharding = bsh
-
-        cdt = self.serve_dtype
 
         def _fn(p, toks, mask):
             self.traces += 1          # python side effect: runs once per trace

@@ -90,31 +90,54 @@ class JaxEmbedderBackend(Backend):
     baseline the shape-bucketed backend (``repro.core.bucketing``) beats.
     Payloads longer than ``max_tokens`` are truncated; truncations are
     counted locally and into ``telemetry`` when attached.
+
+    ``dtype`` (optional) selects a serving precision policy realised ONCE
+    at load by ``repro.models.quantize.serve_params``: ``"fp32"`` (fp32
+    weights + fp32 trunk — the precision oracle), ``"bf16"`` (bf16-resident
+    weights, bf16 trunk), or ``"int8"`` (int8 weight-only quantized
+    projections + fp32 scales, fp32 activations, routed through the fused
+    quant matmul by ``models.layers.dense_apply``).  None keeps the legacy
+    behaviour: raw params with the model's default compute dtype.
     """
 
     def __init__(self, cfg, params, max_tokens: int = 128,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None, *,
+                 dtype: Optional[str] = None):
         import jax
         import jax.numpy as jnp
 
         from repro.models import embedder
 
         self.cfg = cfg
-        self.params = params
+        self.dtype = dtype
         self.max_tokens = max_tokens
         self.telemetry = telemetry
-        self.name = f"jax-cpu/{cfg.name}"
+        self.name = f"jax-cpu/{cfg.name}" + (f"/{dtype}" if dtype else "")
         self.traces = 0          # jit retraces (one per new padded shape)
         self.truncated = 0
         self.real_tokens = 0     # tokens the queries actually carried
         self.padded_tokens = 0   # tokens added by padding (wasted FLOPs)
 
+        if dtype is None:
+            self.params = params
+            cdt = None           # model default (layers.COMPUTE_DTYPE)
+        else:
+            from repro.models.quantize import serve_params
+            self.params, cdt = serve_params(params, dtype)
+
         def _fn(p, toks, mask):
             self.traces += 1          # python side effect: runs once per trace
-            return embedder.embed(p, cfg, toks, mask)
+            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt)
 
         self._embed = jax.jit(_fn)
         self._jnp = jnp
+
+    @property
+    def params_nbytes(self) -> int:
+        """Resident serving-weight footprint (int8 serving: ~4x under fp32)."""
+        import jax
+
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.params))
 
     def _tokenize(self, queries: Sequence[Query], seq_len: int, out=None):
         """Pad/truncate a batch into (tokens, mask) of width ``seq_len``.
@@ -128,6 +151,12 @@ class JaxEmbedderBackend(Backend):
         sharded backend keeps one pair per (B, S) bucket so steady-state
         serving stops allocating fresh host arrays per batch.  Padding rows
         beyond the batch are zeroed (all-zero mask == dropped by pooling).
+
+        Vectorized: this runs inside the worker thread on EVERY batch, so
+        the fill is two bulk numpy writes — the mask broadcast from a
+        length vector, the token grid from one stacked payload flat-assign
+        (synthetic rows share a single base pattern) — instead of a
+        per-query row loop.
         """
         B = len(queries)
         if out is None:
@@ -137,18 +166,32 @@ class JaxEmbedderBackend(Backend):
             toks, mask = out
             toks[:] = 0
             mask[:] = 0.0
-        real = 0
-        truncated = 0
-        for i, q in enumerate(queries):
-            ids = q.payload
-            if ids is None:
-                ids = (np.arange(q.length) % (self.cfg.vocab_size - 1)) + 1
-            if len(ids) > seq_len:
-                truncated += 1
-            n = min(len(ids), seq_len)
-            toks[i, :n] = np.asarray(ids[:n], np.int32)
-            mask[i, :n] = 1.0
-            real += n
+        if B == 0:
+            return toks, mask, 0, 0
+        lens = np.fromiter(
+            (q.length if q.payload is None else len(q.payload)
+             for q in queries), np.int64, count=B)
+        n = np.minimum(lens, seq_len)
+        truncated = int((lens > seq_len).sum())
+        real = int(n.sum())
+        valid = np.arange(seq_len)[None, :] < n[:, None]      # (B, seq_len)
+        mask[:B] = valid
+        synth = np.fromiter((q.payload is None for q in queries), bool,
+                            count=B)
+        tv = toks[:B]                   # basic-slice view: writes land in out
+        if synth.any():
+            # every synthetic stream is the same deterministic prefix
+            base = ((np.arange(seq_len, dtype=np.int64)
+                     % (self.cfg.vocab_size - 1)) + 1).astype(np.int32)
+            sel = synth[:, None] & valid
+            tv[sel] = np.broadcast_to(base, (B, seq_len))[sel]
+        if not synth.all():
+            # row-major boolean assignment consumes the concatenated
+            # payloads in exactly batch order
+            flat = np.concatenate(
+                [np.asarray(q.payload[:seq_len]).ravel()
+                 for q in queries if q.payload is not None])
+            tv[~synth[:, None] & valid] = flat.astype(np.int32)
         return toks, mask, real, truncated
 
     def _record_truncations(self, n: int) -> None:

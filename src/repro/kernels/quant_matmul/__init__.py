@@ -1,0 +1,4 @@
+from repro.kernels.quant_matmul.ops import (quant_matmul, quant_matmul_pallas,
+                                            quant_matmul_ref)
+
+__all__ = ["quant_matmul", "quant_matmul_pallas", "quant_matmul_ref"]

@@ -1,0 +1,36 @@
+"""Backend-dispatching jit wrapper for the fused int8 quant matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_m", "block_n",
+                                             "block_k"))
+def quant_matmul(x, w8, scale, *, backend: str = "auto", block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128):
+    """x: (..., K) float; w8: (K, N) int8; scale: (N,) fp32 -> (..., N).
+
+    ``auto`` routes to the Pallas kernel exactly when running on a TPU
+    backend (where int8 VMEM tiles pay off); everywhere else the jnp
+    oracle is the same contract — fp32 accumulation, dequant-by-scale
+    epilogue — lowered through XLA.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return quant_matmul_pallas(x, w8, scale, block_m=block_m,
+                                   block_n=block_n, block_k=block_k,
+                                   interpret=False)
+    if backend == "interpret":
+        return quant_matmul_pallas(x, w8, scale, block_m=block_m,
+                                   block_n=block_n, block_k=block_k,
+                                   interpret=True)
+    return quant_matmul_ref(x, w8, scale)
+
+
+__all__ = ["quant_matmul", "quant_matmul_pallas", "quant_matmul_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused int8 weight-only quant matmul.
+
+The contract every backend route must honour: int8 weights x float
+activations, fp32 MXU accumulation, and the per-output-channel dequant
+scale applied ONCE in the epilogue (weight-only symmetric quantization has
+no zero point, so ``x @ (w8 * s) == (x @ w8) * s`` exactly in real
+arithmetic — applying the scale after the contraction is what makes the
+kernel "fused": the dequantized fp32/bf16 weight matrix is never
+materialised).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quant_matmul_ref(x: jax.Array, w8: jax.Array,
+                     scale: jax.Array) -> jax.Array:
+    """x: (..., K) float; w8: (K, N) int8; scale: (N,) fp32 per-out-channel.
+
+    Returns (..., N) in ``x.dtype``.  Every int8 value in [-127, 127] is
+    exactly representable in bf16 (8 mantissa bits cover integers to 256),
+    so casting the weights to the activation dtype loses nothing; the
+    contraction accumulates fp32 via ``preferred_element_type``.
+    """
+    if w8.dtype != jnp.int8:
+        raise TypeError(f"quantized weights must be int8, got {w8.dtype}")
+    acc = lax.dot_general(x, w8.astype(x.dtype),
+                          (((x.ndim - 1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32)
+    return (acc * scale.astype(jnp.float32)).astype(x.dtype)

@@ -11,6 +11,13 @@ path), and the §Perf serving flags select the optimized rows::
 
     PYTHONPATH=src python -m repro.launch.serve --queries 64 --slo 1.0 \
         --opt embed_dtype=bf16,embed_donate=1,embed_async=1 --prewarm
+
+``embed_dtype=int8`` serves the weight-only quantized trunk (int8
+projections + fp32 dequant scales via the fused quant matmul, 4x smaller
+resident weights, >= 0.99 cosine vs the fp32 oracle); with
+``--policy length-aware`` the dispatch threshold is calibrated from one
+Eq. 12 fit PER seq-length bucket, so it tracks the bucketed (and
+quantized) CPU service curve instead of a hand-picked constant.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ from repro import perf_flags
 from repro.configs import get_config
 from repro.core.bucketing import length_bucket_fn
 from repro.core.device_detector import DeviceInventory, detect
-from repro.core.estimator import estimate_depth
+from repro.core.estimator import estimate_depth, estimate_depth_per_bucket
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, TierSpec)
 from repro.core.sharded_backend import ShardedEmbedderBackend
@@ -96,6 +103,38 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
     print(f"[serve] depths: C_NPU={d_npu} (a={fit_n.alpha:.4f} b={fit_n.beta:.3f}) "
           f"C_CPU={d_cpu}" + (f" (a={fit_c.alpha:.4f} b={fit_c.beta:.3f})"
                               if fit_c else ""))
+
+    policy_obj = POLICIES[policy]()
+    if policy == "length-aware" and det.heter_enable and d_cpu > 0:
+        # one Eq. 12 fit PER seq-length bucket: the long-query threshold is
+        # the first bucket whose measured CPU depth collapses to 0, so the
+        # policy follows the bucketed (and, under embed_dtype=int8,
+        # quantized) service curve instead of the hand-picked default
+        def profile_bucket(c: int, length: int) -> float:
+            from repro.core.queue_manager import Query
+            batch = [Query(qid=i, length=length) for i in range(c)]
+            cpu_be.embed_batch(batch)    # warm this (B, S) bucket: the fit
+            best = float("inf")          # must see service time, not compile
+            for _ in range(2):
+                t0 = time.monotonic()
+                cpu_be.embed_batch(batch)
+                best = min(best, time.monotonic() - t0)
+            return best
+
+        s, lengths = MIN_SEQ_BUCKET, []
+        while s < MAX_TOKENS:
+            lengths.append(s)
+            s *= 2
+        lengths.append(MAX_TOKENS)
+        fits = estimate_depth_per_bucket(
+            profile_bucket, slo, lengths,
+            probe_points=tuple(base * c for c in (1, 2, 4)))
+        policy_obj = LengthAwarePolicy.from_bucket_depths(
+            {b: d for b, (d, _) in fits.items()})
+        print("[serve] per-bucket depths: "
+              + " ".join(f"S{b}:C={d}" for b, (d, _) in sorted(fits.items()))
+              + f" -> long_threshold={policy_obj.long_threshold}")
+
     # the topology is a TierSpec list: N tiers are a config change, not a
     # rewrite (e.g. append a little-core CPU pool here)
     tiers = [TierSpec(NPU, d_npu, backend=npu_be)]
@@ -103,7 +142,7 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be,
                               bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
                                                          MAX_TOKENS)))
-    engine = WindVE(tiers=tiers, policy=POLICIES[policy]())
+    engine = WindVE(tiers=tiers, policy=policy_obj)
     return engine, cfg
 
 
@@ -118,7 +157,8 @@ def main() -> None:
     ap.add_argument("--policy", default="cascade", choices=sorted(POLICIES),
                     help="dispatch policy (cascade == paper Algorithm 1)")
     ap.add_argument("--opt", default="",
-                    help="perf flags, e.g. embed_dtype=bf16,embed_async=1")
+                    help="perf flags, e.g. embed_dtype=int8,embed_async=1 "
+                         "(embed_dtype: fp32|bf16|int8)")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
     ap.add_argument("--prewarm", action="store_true",

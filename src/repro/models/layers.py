@@ -40,6 +40,25 @@ def _dense_init(key, shape, dtype, scale: Optional[float] = None):
 
 
 # ----------------------------------------------------------------------------
+# dense apply — the one place a projection weight meets its activations
+# ----------------------------------------------------------------------------
+
+def dense_apply(p: Params, name: str, x: jax.Array) -> jax.Array:
+    """``x @ p[name]`` with the weight cast to the activation dtype — unless
+    the param tree carries a ``{name}_scale`` dequant sibling (see
+    ``repro.models.quantize``), in which case the projection routes through
+    the fused int8 quant matmul (int8 weights x float activations, fp32
+    accumulation, scale applied once in the epilogue).  Routing is purely
+    param-driven so quantized and float trees share every caller and every
+    jit cache key shape."""
+    scale = p.get(name + "_scale")
+    if scale is None:
+        return x @ p[name].astype(x.dtype)
+    from repro.kernels.quant_matmul.ops import quant_matmul
+    return quant_matmul(x, p[name], scale)
+
+
+# ----------------------------------------------------------------------------
 # norms
 # ----------------------------------------------------------------------------
 
@@ -111,9 +130,9 @@ def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
 def _project_qkv(p: Params, cfg: ModelConfig, x, kv_x):
     hd = cfg.resolved_head_dim
     H, KV = cfg.num_heads, cfg.num_kv_heads
-    q = x @ p["wq"].astype(x.dtype)
-    k = kv_x @ p["wk"].astype(x.dtype)
-    v = kv_x @ p["wv"].astype(x.dtype)
+    q = dense_apply(p, "wq", x)
+    k = dense_apply(p, "wk", kv_x)
+    v = dense_apply(p, "wv", kv_x)
     if "bq" in p:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -296,7 +315,7 @@ def attn_forward(
         out = flash_attention_jnp(
             q, k, v, positions, kv_pos, causal=causal,
             window=cfg.sliding_window if causal else 0, kv_mask=kv_mask)
-    y = out.reshape(*x.shape[:-1], -1) @ p["wo"].astype(x.dtype)
+    y = dense_apply(p, "wo", out.reshape(*x.shape[:-1], -1))
     if return_kv:
         return y, k, v
     return y
@@ -517,11 +536,11 @@ def init_mlp(key, cfg: ModelConfig, dtype) -> Params:
 
 def apply_mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     if cfg.act == "silu":
-        g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
-        u = x @ p["w_up"].astype(x.dtype)
-        return (g * u) @ p["w_down"].astype(x.dtype)
-    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype))
-    return h @ p["w_out"].astype(x.dtype)
+        g = jax.nn.silu(dense_apply(p, "w_gate", x))
+        u = dense_apply(p, "w_up", x)
+        return dense_apply(p, "w_down", g * u)
+    h = jax.nn.gelu(dense_apply(p, "w_in", x))
+    return dense_apply(p, "w_out", h)
 
 
 # ----------------------------------------------------------------------------

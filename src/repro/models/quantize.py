@@ -1,0 +1,137 @@
+"""One-shot int8 weight-only quantization of the serving param tree.
+
+The paper's deployment-cost argument (Eq. 12) makes the CPU tier's
+per-batch service time the binding constraint on peak offload; the trunk's
+dense/attention projections are where that time goes.  This module turns a
+float param tree into an int8-weight serving tree ONCE at load:
+
+* **per-output-channel symmetric scales** — each projection weight
+  ``w: (K, N)`` (or layer-stacked ``(L, K, N)``) quantizes along its
+  contraction axis: ``scale[n] = max|w[:, n]| / 127``,
+  ``q = round(w / scale)`` clipped to [-127, 127].  Symmetric (no zero
+  point) is what lets the dequant commute with the contraction, so the
+  kernel applies the scale once in the epilogue instead of materialising a
+  dequantized weight matrix (see ``repro.kernels.quant_matmul``).
+* **scales ride in the tree** — the quantized weight keeps its key and a
+  sibling ``{name}_scale`` fp32 leaf appears next to it, so the stacked
+  ``blocks`` pytree still scans layer-wise and
+  ``repro.models.layers.dense_apply`` picks the quantized route purely
+  from the params (no config plumbing, no retrace-key changes).
+* **what stays float** — norms, biases, and the embedding table (a gather,
+  not a contraction), plus anything outside ``DENSE_KEYS``.  MoE expert
+  stacks are excluded: their einsum dispatch does not go through
+  ``dense_apply`` (exclusion is structural — an expert-stacked leaf has an
+  extra leading dim beyond the layer stack).
+
+``serve_params`` is the single load-time entry every serving backend uses
+to realise an ``embed_dtype`` policy (fp32 | bf16 | int8).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import DictKey
+
+from repro.parallel.sharding import STACK_KEYS
+
+Params = Dict[str, Any]
+
+# 2-D dense projections consumed as ``x @ w`` by the trunk's dense apply
+# (attention q/k/v/o + both MLP families).  3-D MoE expert weights reuse
+# three of these names but are skipped by the effective-ndim check below.
+DENSE_KEYS = frozenset({"wq", "wk", "wv", "wo",
+                        "w_in", "w_out", "w_gate", "w_up", "w_down"})
+
+# embed_dtype perf-flag values every serving backend accepts
+EMBED_DTYPES = ("fp32", "bf16", "int8")
+
+SCALE_SUFFIX = "_scale"
+
+
+def quantize_dense(w: jax.Array, axis: int = -2
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """(w8 int8, scale fp32) with per-output-channel symmetric scales.
+
+    ``axis`` is the contraction dim of ``x @ w`` (-2: rows of the 2-D
+    weight; a leading layer-stack dim broadcasts through).  An all-zero
+    output channel gets scale 1 so the dequant never divides by zero.
+    """
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis)
+
+
+def _is_stacked(path) -> bool:
+    return any(p.key in STACK_KEYS for p in path if isinstance(p, DictKey))
+
+
+def quantize_params(params: Params) -> Params:
+    """Return a new tree with every dense projection int8-quantized and its
+    ``{name}_scale`` sibling added; float leaves are left untouched (the
+    caller owns their dtype policy)."""
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for name, leaf in node.items():
+            sub = path + (DictKey(name),)
+            if isinstance(leaf, dict):
+                out[name] = walk(leaf, sub)
+                continue
+            eff_ndim = leaf.ndim - (1 if _is_stacked(sub) else 0)
+            if (name in DENSE_KEYS and eff_ndim == 2
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                q, scale = quantize_dense(leaf)
+                out[name] = q
+                out[name + SCALE_SUFFIX] = scale
+            else:
+                out[name] = leaf
+        return out
+
+    return walk(params, ())
+
+
+def is_quantized(params: Params) -> bool:
+    """True if any leaf key carries a dequant scale sibling."""
+    found = [False]
+
+    def walk(node):
+        if isinstance(node, dict):
+            for name, leaf in node.items():
+                if name.endswith(SCALE_SUFFIX):
+                    found[0] = True
+                walk(leaf)
+
+    walk(params)
+    return found[0]
+
+
+def serve_params(params: Params, dtype: str) -> Tuple[Params, Any]:
+    """Realise an ``embed_dtype`` serving policy on a float param tree.
+
+    Returns ``(tree, compute_dtype)``:
+
+    * ``fp32`` — the tree untouched, fp32 activations (the precision
+      oracle every optimized row is guarded against);
+    * ``bf16`` — every float leaf cast ONCE to bf16, bf16 activations;
+    * ``int8`` — dense projections quantized per ``quantize_params``
+      (weights int8 + fp32 scales), everything else fp32, fp32
+      activations — the weight-only policy: quantization error enters
+      through the weights alone, and the ``pool_norm`` epilogue keeps
+      served vectors fp32 unit vectors for every policy.
+    """
+    if dtype not in EMBED_DTYPES:
+        raise ValueError(f"embed dtype must be one of {'|'.join(EMBED_DTYPES)}"
+                         f", got {dtype!r}")
+    if dtype == "bf16":
+        return (jax.tree.map(lambda x: x.astype(jnp.bfloat16)
+                             if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                             params), jnp.bfloat16)
+    if dtype == "int8":
+        return quantize_params(params), jnp.float32
+    return params, jnp.float32

@@ -64,9 +64,13 @@ class PerfFlags:
     # activations; recompute only the cheap elementwise/attention math).
     remat_policy: str = "full"
     # embedding serving precision: "fp32" (baseline oracle: fp32-resident
-    # weights, fp32 trunk) or "bf16" (weights cast ONCE at load, all matmuls
-    # bf16; the pool_norm epilogue always accumulates fp32 so served vectors
-    # stay fp32 unit vectors within 1e-2 cosine of the oracle).
+    # weights, fp32 trunk), "bf16" (weights cast ONCE at load, all matmuls
+    # bf16), or "int8" (weight-only per-output-channel symmetric int8
+    # quantization of every dense/attention projection at load, fp32 scales,
+    # fp32 activations, the fused quant-matmul kernel in the trunk — 4x
+    # smaller resident weights).  The pool_norm epilogue always accumulates
+    # fp32 so served vectors stay fp32 unit vectors within 1e-2 cosine
+    # (>= 0.99) of the oracle for every policy.
     embed_dtype: str = "fp32"
     # embedding serving: donate the token/mask device buffers to the jit'd
     # embed (jit donate_argnums) so XLA reuses them instead of allocating

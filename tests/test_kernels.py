@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.flash_attention import (attention_ref, flash_attention,
                                            flash_attention_pallas)
 from repro.kernels.pool_norm import pool_norm, pool_norm_pallas, pool_norm_ref
+from repro.kernels.quant_matmul import (quant_matmul, quant_matmul_pallas,
+                                        quant_matmul_ref)
 from repro.kernels.rmsnorm import rmsnorm_pallas, rmsnorm_ref
 from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
 
@@ -239,6 +241,94 @@ def test_pool_norm_rejects_unknown_mode():
         pool_norm_ref(h, m, "max")
     with pytest.raises(ValueError):
         pool_norm_pallas(h, m, "max", interpret=True)
+
+
+# ---------------------------------------------------------------- quant ----
+QM_CASES = [
+    # M, K, N, block_m, block_n, block_k
+    (128, 128, 128, 128, 128, 128),   # exactly one block
+    (200, 96, 260, 128, 128, 64),     # every dim ragged vs its block
+    (7, 48, 130, 8, 128, 32),         # small M, K split across steps
+    (256, 320, 64, 64, 64, 128),      # multi-block M and K
+    (1, 16, 24, 128, 128, 128),       # single row, tiny dims
+]
+
+
+@pytest.mark.parametrize("case", QM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_vs_ref(case, dtype):
+    """Pallas (interpret) fused int8 matmul == the jnp oracle across block
+    raggedness and both activation dtypes (fp32 accumulation in both)."""
+    M, K, N, bm, bn, bk = case
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(dtype)
+    w8 = jax.random.randint(ks[1], (K, N), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    scale = jnp.abs(jax.random.normal(KEY, (N,))) * 0.01 + 1e-4
+    ref = quant_matmul_ref(x, w8, scale)
+    got = quant_matmul_pallas(x, w8, scale, block_m=bm, block_n=bn,
+                              block_k=bk, interpret=True)
+    assert got.dtype == ref.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_quant_matmul_leading_batch_dims():
+    x = jax.random.normal(KEY, (2, 9, 48))
+    w8 = jax.random.randint(KEY, (48, 64), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    s = jnp.full((64,), 0.02)
+    a = quant_matmul_ref(x, w8, s)
+    b = quant_matmul_pallas(x, w8, s, interpret=True)
+    assert a.shape == b.shape == (2, 9, 64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_quant_matmul_ops_backend_dispatch():
+    """The jit ops wrapper: 'ref' and 'interpret' routes agree; int8 weights
+    are mandatory (a float weight means the caller forgot to quantize)."""
+    x = jax.random.normal(KEY, (5, 32))
+    w8 = jax.random.randint(KEY, (32, 40), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    s = jnp.full((40,), 0.03)
+    a = quant_matmul(x, w8, s, backend="ref")
+    b = quant_matmul(x, w8, s, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    with pytest.raises(TypeError, match="int8"):
+        quant_matmul_ref(x, x, s)
+    with pytest.raises(TypeError, match="int8"):
+        quant_matmul_pallas(x, x.astype(jnp.float32), s, interpret=True)
+
+
+def test_quant_matmul_block_size_invariance():
+    x = jax.random.normal(KEY, (96, 160))
+    w8 = jax.random.randint(KEY, (160, 192), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    s = jnp.abs(jax.random.normal(KEY, (192,))) * 0.01 + 1e-4
+    a = quant_matmul_pallas(x, w8, s, block_m=32, block_n=64, block_k=32,
+                            interpret=True)
+    b = quant_matmul_pallas(x, w8, s, block_m=96, block_n=192, block_k=160,
+                            interpret=True)
+    # K-split changes fp32 accumulation order only
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-5)
+
+
+def test_quant_matmul_matches_dense_apply_contract():
+    """quantize_dense + quant_matmul approximates the float projection the
+    way models.layers.dense_apply relies on (error bounded by the
+    per-channel scale)."""
+    from repro.models.quantize import quantize_dense
+    w = jax.random.normal(KEY, (64, 96)) * jnp.linspace(0.2, 2.0, 96)
+    q, s = quantize_dense(w)
+    x = jax.random.normal(KEY, (8, 64))
+    got = np.asarray(quant_matmul_pallas(x, q, s, interpret=True))
+    want = np.asarray(x @ w)
+    # |err| <= sum_k |x_k| * scale_n / 2 elementwise
+    bound = (np.abs(np.asarray(x)).sum(-1, keepdims=True)
+             * np.asarray(s)[None, :] * 0.5 + 1e-5)
+    assert (np.abs(got - want) <= bound).all()
 
 
 # ---------------------------------------------------------------- rmsnorm --

@@ -301,6 +301,24 @@ ref = ShardedEmbedderBackend(cfg, params, max_tokens=32, dtype="bf16",
                              devices=jax.devices()[:1], min_seq_bucket=8)
 np.testing.assert_allclose(out, np.stack(ref.embed_batch(qs)), atol=1e-5)
 print("SHARDED-8DEV-OK")
+
+# int8 weight-only serving composes with the 8-device mesh + donation +
+# async dispatch: int8 leaves resident/replicated, vectors match the
+# 1-device int8 mesh exactly
+import jax.numpy as jnp
+q8 = ShardedEmbedderBackend(cfg, params, max_tokens=32, dtype="int8",
+                            donate=True, async_dispatch=True,
+                            min_seq_bucket=8)
+leaves = jax.tree.leaves(q8.params)
+assert any(l.dtype == jnp.int8 for l in leaves)
+for leaf in leaves:
+    assert len(leaf.sharding.device_set) == 8
+fetch = q8.embed_batch_async(qs)
+out8 = np.stack(fetch())
+ref8 = ShardedEmbedderBackend(cfg, params, max_tokens=32, dtype="int8",
+                              devices=jax.devices()[:1], min_seq_bucket=8)
+np.testing.assert_allclose(out8, np.stack(ref8.embed_batch(qs)), atol=1e-5)
+print("SHARDED-8DEV-INT8-OK")
 """
 
 
@@ -318,6 +336,7 @@ def test_eight_device_mesh_end_to_end(bge_smoke):
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "SHARDED-8DEV-OK" in proc.stdout
+    assert "SHARDED-8DEV-INT8-OK" in proc.stdout
 
 
 def test_serve_devices_clamps_to_pow2():
