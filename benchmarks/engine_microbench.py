@@ -23,14 +23,21 @@ def run(devices: int = 1) -> list[Row]:
     from repro.core.estimator import fit_latency
     from repro.core.routing import (CPU, NPU, CascadePolicy,
                                     LeastLoadedPolicy, LengthAwarePolicy,
-                                    Query, QueueManager, TierSpec)
+                                    PredictivePolicy, Query, QueueManager,
+                                    TierSpec)
+    from repro.core.simulator import PAPER_DEVICES
     from repro.core.windve import JaxEmbedderBackend
     from repro.models import embedder
 
     rows: list[Row] = []
 
-    # per-policy dispatch cost through the shared scheduling core
-    for policy in (CascadePolicy(), LengthAwarePolicy(), LeastLoadedPolicy()):
+    # per-policy dispatch cost through the shared scheduling core (the
+    # predictive policy prices a calibrated curve per candidate tier, so
+    # its per-query cost is the one to watch as tiers multiply)
+    for policy in (CascadePolicy(), LengthAwarePolicy(), LeastLoadedPolicy(),
+                   PredictivePolicy(
+                       fits={NPU: PAPER_DEVICES["tesla-v100/bge"],
+                             CPU: PAPER_DEVICES["xeon-e5-2690/bge"]})):
         qm = QueueManager([TierSpec(NPU, 10 ** 6), TierSpec(CPU, 10 ** 6)],
                           policy=policy)
         i = [0]

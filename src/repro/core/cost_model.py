@@ -60,6 +60,39 @@ def throughput_uplift(c_npu: int, c_cpu: int) -> float:
     return c_cpu / c_npu
 
 
+def fanout_depth(alpha: float, beta: float, devices: int, slo_s: float,
+                 overhead_s: float = 0.0) -> int:
+    """Closed-form Eq. 12 depth for an N-device fan-out tier.
+
+    With the per-device curve t(c) = beta + alpha * c and a batch of C
+    spreading C/N rows per device (plus a per-execution fan-out/gather
+    overhead), the tier's service curve is
+
+        t(C) = beta + overhead + alpha * C / N ,
+
+    so the SLO-safe depth scales ~N-fold minus what the overhead eats:
+
+        C_max = N * floor((T - beta - overhead) / alpha).
+    """
+    if alpha <= 0:
+        raise ValueError("alpha must be positive")
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    budget = slo_s - beta - overhead_s
+    if budget < alpha:            # even 1 row per device misses the SLO
+        return 0
+    return devices * math.floor(budget / alpha + 1e-9)
+
+
+def fanout_efficiency(depth_n: int, depth_1: int, devices: int) -> float:
+    """Fraction of the ideal N-fold depth scaling a fan-out tier realises:
+    depth_N / (N * depth_1).  1.0 == perfect linear scaling; the
+    fan-out/gather overhead and pow2 chunk padding pull it below."""
+    if depth_1 <= 0 or devices < 1:
+        raise ValueError("need positive single-device depth and devices")
+    return depth_n / (devices * depth_1)
+
+
 def concurrency_uplift_bound(alpha_npu: float, alpha_cpu: float) -> float:
     """Ineq. 19: C_CPU/C_NPU < alpha_NPU/alpha_CPU — the uplift is bounded by
     the device performance-gap ratio."""

@@ -62,6 +62,19 @@ def fit_latency(concurrency: Sequence[float], latency_s: Sequence[float],
     return LatencyFit(float(alpha), float(beta), 1.0 - ss_res / ss_tot)
 
 
+def fanout_probe_points(devices: int,
+                        base: Sequence[int] = (1, 4, 16, 64),
+                        ) -> Tuple[int, ...]:
+    """Probe points for an N-device fan-out tier: multiples of the device
+    count.  A mesh-floored backend pads every batch below ``devices`` up to
+    one identical per-device row count, so probing raw (1, 4, ...) on an
+    8-device tier measures the SAME execution several times, fits a flat
+    line and trips the estimator's unbounded-depth sentinel — each probe
+    must exercise a distinct per-device row count."""
+    d = max(1, int(devices))
+    return tuple(d * int(c) for c in base)
+
+
 def estimate_depth(profile_fn: Callable[[int], float], slo_s: float,
                    probe_points: Sequence[int] = (1, 4, 16, 64),
                    ) -> Tuple[int, LatencyFit]:

@@ -244,6 +244,76 @@ class LeastLoadedPolicy(DispatchPolicy):
         return [tiers[i].name for i in order]
 
 
+class PredictivePolicy(DispatchPolicy):
+    """Route to the tier with the minimal *predicted completion time*.
+
+    The paper's Eq. 12 says tier service latency is (near-)linear in
+    concurrency; the cascade ignores that and fills the fast tier to its
+    depth before spilling, so at peak every fast-tier query pays the
+    full-depth latency while slow-tier slots idle at t(1).  This policy
+    prices each candidate tier with its calibrated service curve at the
+    backlog the query would join:
+
+        predicted(tier) = fit_tier.latency(backlog(tier) + 1)
+
+    where backlog counts queued + in-flight queries (the paper's C
+    semantics) and ``fit`` is anything with a ``latency(concurrency)``
+    method — an ``estimator.LatencyFit`` (offline calibration), a
+    ``simulator.DeviceModel``/``FanOutModel`` (the DES), or whatever the
+    online calibrator refits from live traffic
+    (``adaptive.attach(..., policy=...)`` keeps the fits fresh through the
+    engine's batch-completion hook).
+
+    ``bucket_fn`` (optional, ``Query -> bucket``) selects per-bucket fits
+    registered via ``update(tier, fit, bucket=...)`` — a bucketed CPU tier
+    serves a 16-token bucket several times faster than a 96-token one, so
+    one global line misprices long queries (§5.4).  Lookup falls back from
+    ``(tier, bucket)`` to the tier-level fit; tiers with no fit at all keep
+    their cascade order BEHIND every fitted tier, so an uncalibrated
+    topology degrades to Algorithm 1 instead of routing blind.
+    """
+
+    name = "predictive"
+
+    def __init__(self, fits: Optional[Dict[str, Any]] = None,
+                 bucket_fn: Optional[Callable[[Query], Any]] = None):
+        self.bucket_fn = bucket_fn
+        self._fits: Dict[Any, Any] = dict(fits or {})
+        self._fit_lock = threading.Lock()
+
+    def update(self, tier: str, fit: Any, bucket: Any = None) -> None:
+        """Install/replace the service-curve estimate for a tier (or one of
+        its length buckets).  Called by the online calibrator on refit."""
+        with self._fit_lock:
+            self._fits[tier if bucket is None else (tier, bucket)] = fit
+
+    def fit_for(self, tier: str, query: Optional[Query] = None) -> Any:
+        with self._fit_lock:
+            if query is not None and self.bucket_fn is not None:
+                f = self._fits.get((tier, self.bucket_fn(query)))
+                if f is not None:
+                    return f
+            return self._fits.get(tier)
+
+    def predicted_completion_s(self, tier: str, query: Query,
+                               qm: "QueueManager") -> Optional[float]:
+        """Service latency this query would see joining ``tier`` now, per
+        the tier's calibrated curve; None when the tier has no fit yet."""
+        fit = self.fit_for(tier, query)
+        if fit is None:
+            return None
+        return float(fit.latency(len(qm.queues[tier]) + 1))
+
+    def candidates(self, query, tiers, qm):
+        def key(i: int):
+            p = self.predicted_completion_s(tiers[i].name, query, qm)
+            # fitted tiers first, cheapest predicted completion wins;
+            # unfitted tiers trail in cascade order (graceful degrade)
+            return (0, p, i) if p is not None else (1, 0.0, i)
+
+        return [tiers[i].name for i in sorted(range(len(tiers)), key=key)]
+
+
 class QueueManager:
     """Policy dispatch over N bounded tier queues (Algorithm 1 core).
 

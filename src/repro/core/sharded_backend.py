@@ -182,6 +182,16 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
         self._staging: dict = {}        # (bb, sb) -> list[(toks, mask)]
         self._staging_use: dict = {}    # (bb, sb) -> fills so far
         self._staging_lock = threading.Lock()
+        # overrun guard: staged-but-unfetched executions per bucket.  A slot
+        # is reused ``staging_slots`` stagings later; if that many are still
+        # pending, refilling would overwrite host data a deferred/aliased
+        # ``device_put`` may still read — the served embeddings would be
+        # silently ROTATED between batches.  Raise loudly instead (the
+        # documented fix: staging_slots >= 2 x worker threads).  Every
+        # fetch thunk returned by ``embed_batch_async`` must be called
+        # exactly once — dropping one permanently occupies its slots.
+        self._staging_pending: dict = {}   # (bb, sb) -> in-flight stagings
+        self._staging_tl = threading.local()
 
         if prewarm_buckets:
             self.prewarm(prewarm_buckets)
@@ -204,17 +214,53 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
         ``staging_slots`` beyond 2 workers)."""
         key = (bb, sb)
         with self._staging_lock:
-            ring = self._staging.setdefault(key, [])
-            use = self._staging_use.get(key, 0)
-            self._staging_use[key] = use + 1
-            if len(ring) < self._staging_slots:
-                ring.append((np.zeros((bb, sb), np.int32),
-                             np.zeros((bb, sb), np.float32)))
-            out = ring[use % len(ring)]
-            toks, mask, real, truncated = self._tokenize(chunk, sb, out=out)
-            td = self._jax.device_put(toks, self._batch_sharding)
-            md = self._jax.device_put(mask, self._batch_sharding)
+            pending = self._staging_pending.get(key, 0)
+            if pending >= self._staging_slots:
+                raise RuntimeError(
+                    f"staging ring overrun on bucket {key}: {pending} "
+                    f"staged batches not yet fetched with staging_slots="
+                    f"{self._staging_slots}.  Refilling now would overwrite "
+                    f"host buffers an enqueued execution may still read "
+                    f"(rotated embeddings).  More than 2 worker threads — "
+                    f"or callers holding fetches back beyond the worker's "
+                    f"double-buffering — share this backend: construct it "
+                    f"with staging_slots >= 2 x workers.")
+            self._staging_pending[key] = pending + 1
+            try:
+                ring = self._staging.setdefault(key, [])
+                use = self._staging_use.get(key, 0)
+                self._staging_use[key] = use + 1
+                if len(ring) < self._staging_slots:
+                    ring.append((np.zeros((bb, sb), np.int32),
+                                 np.zeros((bb, sb), np.float32)))
+                out = ring[use % len(ring)]
+                toks, mask, real, truncated = self._tokenize(chunk, sb,
+                                                             out=out)
+                td = self._jax.device_put(toks, self._batch_sharding)
+                md = self._jax.device_put(mask, self._batch_sharding)
+            except Exception:
+                # failed BEFORE the caller could capture the key for its
+                # own rollback: undo the pending count here or the bucket
+                # is poisoned into spurious overrun errors forever
+                n = self._staging_pending.get(key, 1) - 1
+                if n > 0:
+                    self._staging_pending[key] = n
+                else:
+                    self._staging_pending.pop(key, None)
+                raise
+        keys = getattr(self._staging_tl, "keys", None)
+        if keys is not None:        # capture for the enclosing async call
+            keys.append(key)
         return td, md, real, truncated
+
+    def _release_staging(self, keys) -> None:
+        with self._staging_lock:
+            for k in keys:
+                n = self._staging_pending.get(k, 0) - 1
+                if n > 0:
+                    self._staging_pending[k] = n
+                else:
+                    self._staging_pending.pop(k, None)
 
     def embed_batch_async(self, queries: Sequence[Query]
                           ) -> Callable[[], List[np.ndarray]]:
@@ -227,13 +273,33 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
         device->host copy — the engine worker calls it one batch late
         (double buffering) so the copy overlaps the next batch's compute.
         """
-        handles = self._enqueue_chunks(queries)
+        self._staging_tl.keys = []
+        try:
+            handles = self._enqueue_chunks(queries)
+        except Exception:
+            # roll back this call's pending counts (e.g. the overrun guard
+            # fired on a later chunk) so one failed batch cannot poison the
+            # accounting for every batch after it
+            self._release_staging(self._staging_tl.keys)
+            raise
+        finally:
+            keys, self._staging_tl.keys = self._staging_tl.keys, None
 
         def fetch() -> List[np.ndarray]:
-            out: List[np.ndarray] = []
-            for n, dev in handles:
-                arr = np.asarray(dev)     # blocks until ready; gathers shards
-                out.extend(arr[i] for i in range(n))
+            try:
+                out: List[np.ndarray] = []
+                for n, dev in handles:
+                    arr = np.asarray(dev)  # blocks until ready; gathers
+                    out.extend(arr[i] for i in range(n))
+            finally:
+                # results copied out: the executions consumed their staged
+                # inputs, so the slots may rotate again
+                self._release_staging(keys)
             return out
 
         return fetch
+
+    def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
+        # route the sync path through the async one so staging-pending
+        # accounting (stage -> fetch) stays balanced for every caller
+        return self.embed_batch_async(queries)()

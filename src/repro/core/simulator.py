@@ -101,6 +101,115 @@ PAPER_DEVICES: Dict[str, DeviceModel] = {
 }
 
 
+def _pow2_chunks(batch: int, floor: int) -> List[int]:
+    """Pow2 chunk sizes covering ``batch`` with every chunk >= ``floor``.
+
+    Mirrors ``BucketedEmbedderBackend._batch_plan`` (greedy binary
+    decomposition, single rounded-up launch preferred when it pads no more
+    rows) so the DES models the same executions the real sharded backend
+    performs.  Duplicated rather than imported: ``bucketing`` sits above the
+    engine layer and importing it here would cycle."""
+    g = max(1, floor)
+    greedy: List[int] = []
+    rem = int(batch)
+    while rem > 0:
+        c = max(1 << (rem.bit_length() - 1), g)   # largest pow2 <= rem
+        greedy.append(c)
+        rem -= min(c, rem)
+    single = g if batch <= g else 1 << (int(batch) - 1).bit_length()
+    return [single] if single <= sum(greedy) else greedy
+
+
+@dataclass(frozen=True)
+class FanOutModel:
+    """Sharded accelerator tier: one batch fans out over ``devices``.
+
+    The paper's Eq. 12 fits the *measured per-tier service curve*; when the
+    tier is a device mesh (``ShardedEmbedderBackend``), that curve is NOT
+    the single-device one — a batch is bucketed to pow2 chunks floored at
+    the mesh size, each chunk runs data-parallel with ``chunk/devices`` rows
+    per device, and the chunk completes when the SLOWEST device does.  This
+    model reproduces exactly that shape so ``estimate_depth`` calibrated on
+    it matches the depth calibrated on the real sharded backend:
+
+    * ``chunk_plan`` mirrors the bucketed backend's binary batch
+      decomposition with the floor raised to the device count;
+    * per-device service time comes from the wrapped single-device
+      ``DeviceModel`` at the per-device row count (the existing
+      length/batch cost model, unchanged);
+    * each chunk adds a fan-out/gather overhead term
+      (``fanout_beta_s * log2(devices)`` — a tree scatter+gather), and a
+      noisy base model samples each device independently, so the chunk
+      latency is the straggler's (max over devices);
+    * chunks of one batch serialize (the real backend enqueues them on the
+      same mesh back to back).
+
+    ``devices=1`` is rejected — use the base ``DeviceModel`` directly
+    (``sharded_model`` below does this), so a 1-device tier stays bitwise
+    the PR 2 path.
+    """
+
+    base: DeviceModel
+    devices: int
+    fanout_beta_s: float = 0.0
+
+    def __post_init__(self):
+        if self.devices < 2:
+            raise ValueError("FanOutModel needs >= 2 devices; use the base "
+                             "DeviceModel for a single device")
+        if self.devices & (self.devices - 1):
+            raise ValueError(f"devices must be a power of two (mesh "
+                             f"constraint), got {self.devices}")
+
+    # profile_fn_for / telemetry duck-type these off DeviceModel
+    @property
+    def name(self) -> str:
+        return f"{self.base.name}x{self.devices}dev"
+
+    @property
+    def noise_std(self) -> float:
+        return self.base.noise_std
+
+    @property
+    def ref_length(self) -> int:
+        return self.base.ref_length
+
+    @property
+    def overhead_s(self) -> float:
+        """Per-execution scatter+gather cost of the mesh (tree depth)."""
+        return self.fanout_beta_s * math.log2(self.devices)
+
+    def chunk_plan(self, batch: int) -> List[int]:
+        """Pow2 execution chunks for a batch (floored at the mesh size)."""
+        return _pow2_chunks(batch, self.devices)
+
+    def latency(self, concurrency: float, length: int = 75,
+                rng: Optional[random.Random] = None) -> float:
+        batch = max(1, int(math.ceil(concurrency)))
+        total = 0.0
+        for chunk in self.chunk_plan(batch):
+            rows = chunk // self.devices
+            if self.base.noise_std and rng is not None:
+                # independent per-device noise: the chunk finishes with the
+                # straggler (the Atlas/Kunpeng outliers of §5.3, fanned out)
+                per_dev = max(self.base.latency(rows, length, rng)
+                              for _ in range(self.devices))
+            else:
+                per_dev = self.base.latency(rows, length)
+            total += self.overhead_s + per_dev
+        return total
+
+
+def sharded_model(base: DeviceModel, devices: int = 1,
+                  fanout_beta_s: float = 0.0):
+    """The DES-side mirror of ``ShardedEmbedderBackend``'s mesh degrade
+    rule: 1 device IS the base model (bitwise the single-device path),
+    2+ devices wrap it in the fan-out service-curve model."""
+    if devices <= 1:
+        return base
+    return FanOutModel(base, devices, fanout_beta_s)
+
+
 def cpu_core_scaled(dev: DeviceModel, cores: int, full_cores: int = 44
                     ) -> DeviceModel:
     """§5.4 CPU-core scalability, calibrated to the paper's Fig. 6:

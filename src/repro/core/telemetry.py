@@ -141,6 +141,7 @@ class Telemetry:
             "violations": self.violations,
             "truncated": self.truncated,
             "p50_s": self.p(50),
+            "p95_s": self.p(95),
             "p99_s": self.p(99),
             "batch_p50_s": self.batch_p(50),
             "batch_p95_s": self.batch_p(95),

@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import estimator
 from repro.core.routing import (BUSY, CPU, NPU, DispatchPolicy, Query,
                                 QueueManager, TierSpec)
-from repro.core.simulator import DeviceModel
+from repro.core.simulator import DeviceModel, sharded_model
 from repro.core.telemetry import EngineStats, Telemetry
 
 BatchHook = Callable[[str, Sequence[Query], float], None]
@@ -67,10 +67,23 @@ class Backend:
 
 
 class ModeledBackend(Backend):
-    def __init__(self, model: DeviceModel, embed_dim: int = 1024):
-        self.model = model
+    """Wall-clock stand-in for the accelerator pool.
+
+    ``devices=N`` models the tier as an N-device mesh: the same fan-out
+    service curve the DES uses (``repro.core.simulator.FanOutModel`` —
+    pow2 per-device chunks mirroring ``ShardedEmbedderBackend``'s
+    mesh-floored buckets, chunk latency = the straggler device's, plus a
+    ``fanout_beta_s * log2(N)`` scatter/gather term per execution).
+    ``devices=1`` keeps the wrapped model untouched, exactly like a
+    1-device mesh degrading to the single-device path.
+    """
+
+    def __init__(self, model: DeviceModel, embed_dim: int = 1024, *,
+                 devices: int = 1, fanout_beta_s: float = 0.0):
+        self.model = sharded_model(model, devices, fanout_beta_s)
+        self.devices = max(1, devices)
         self.embed_dim = embed_dim
-        self.name = model.name
+        self.name = self.model.name
 
     def embed_batch(self, queries: Sequence[Query]) -> List[np.ndarray]:
         # the batch is served as ONE padded execution, so its latency follows

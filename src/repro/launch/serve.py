@@ -29,11 +29,13 @@ import numpy as np
 
 from repro import perf_flags
 from repro.configs import get_config
+from repro.core import adaptive
 from repro.core.bucketing import length_bucket_fn
 from repro.core.device_detector import DeviceInventory, detect
-from repro.core.estimator import estimate_depth, estimate_depth_per_bucket
+from repro.core.estimator import (estimate_depth, estimate_depth_per_bucket,
+                                  fanout_probe_points)
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
-                                LengthAwarePolicy, TierSpec)
+                                LengthAwarePolicy, PredictivePolicy, TierSpec)
 from repro.core.sharded_backend import ShardedEmbedderBackend
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import ModeledBackend, WindVE
@@ -44,6 +46,7 @@ POLICIES = {
     "cascade": CascadePolicy,
     "length-aware": LengthAwarePolicy,
     "least-loaded": LeastLoadedPolicy,
+    "predictive": PredictivePolicy,
 }
 
 MAX_TOKENS = 96
@@ -54,7 +57,7 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                  smoke: bool = True, heter: bool = True,
                  npu_model: str = "tesla-v100/bge", seed: int = 0,
                  policy: str = "cascade", devices: int = 0,
-                 prewarm: bool = False):
+                 npu_devices: int = 1, prewarm: bool = False):
     cfg = get_config(model)
     if smoke:
         cfg = cfg.smoke()
@@ -64,8 +67,12 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
     print(f"[serve] detector: main={det.device_main} aux={det.device_auxiliary} "
           f"heter={det.heter_enable}")
 
+    # the modeled accelerator pool: --npu-devices N fans the tier out over
+    # an N-device mesh model (per-device pow2 chunks + gather overhead), so
+    # the depth calibrated below fits the curve a sharded deployment shows
     npu_dev = PAPER_DEVICES[npu_model]
-    npu_be = ModeledBackend(npu_dev, embed_dim=cfg.d_model)
+    npu_be = ModeledBackend(npu_dev, embed_dim=cfg.d_model,
+                            devices=npu_devices)
     # the real pool: one tier fans out over the local device mesh; dtype /
     # donation / async dispatch follow the embed_* §Perf flags
     local = jax.local_devices()
@@ -80,7 +87,11 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         print(f"[serve] prewarmed {n} (B, S) buckets — zero compile stalls")
 
     # --- §4.2.2: calibrate queue depths with the linear-regression estimator
-    d_npu, fit_n = estimate_depth(profile_fn_for(npu_dev), slo)
+    # (probing the FAN-OUT model at multiples of the device count, so the
+    # fitted line is the sharded tier's service curve, not one device's)
+    d_npu, fit_n = estimate_depth(profile_fn_for(npu_be.model),
+                                  slo,
+                                  probe_points=fanout_probe_points(npu_devices))
 
     def profile_cpu(c: int) -> float:
         qs = make_queries(c, cfg.vocab_size, length=75, seed=seed)
@@ -105,6 +116,13 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                               if fit_c else ""))
 
     policy_obj = POLICIES[policy]()
+    if policy == "predictive":
+        # seed the latency-predictive dispatch with the offline Eq. 12 fits
+        # (per-tier service curves); the online calibrator attached below
+        # refreshes them from live traffic through the batch hook
+        policy_obj = PredictivePolicy(
+            fits={NPU: fit_n, **({CPU: fit_c} if fit_c else {})},
+            bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET, MAX_TOKENS))
     if policy == "length-aware" and det.heter_enable and d_cpu > 0:
         # one Eq. 12 fit PER seq-length bucket: the long-query threshold is
         # the first bucket whose measured CPU depth collapses to 0, so the
@@ -143,6 +161,13 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                               bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
                                                          MAX_TOKENS)))
     engine = WindVE(tiers=tiers, policy=policy_obj)
+    if policy == "predictive":
+        # live fits: every completed batch feeds the calibrator; every refit
+        # streams fresh per-tier (and per-bucket) curves into the policy
+        adaptive.attach(engine, adaptive.OnlineCalibrator(slo),
+                        policy=policy_obj,
+                        bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
+                                                   MAX_TOKENS))
     return engine, cfg
 
 
@@ -161,6 +186,9 @@ def main() -> None:
                          "(embed_dtype: fp32|bf16|int8)")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
+    ap.add_argument("--npu-devices", type=int, default=1,
+                    help="devices the MODELED accelerator tier fans out "
+                         "over (DES-calibrated Eq. 12 fan-out curve)")
     ap.add_argument("--prewarm", action="store_true",
                     help="compile the (B, S) bucket grid before serving")
     args = ap.parse_args()
@@ -169,6 +197,7 @@ def main() -> None:
         perf_flags.set_flags(**perf_flags.parse_opt(args.opt))
     engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter,
                                policy=args.policy, devices=args.devices,
+                               npu_devices=args.npu_devices,
                                prewarm=args.prewarm)
     queries = make_queries(args.queries, cfg.vocab_size, args.length)
     t0 = time.monotonic()

@@ -1,0 +1,150 @@
+"""Acceptance tests for the sharded-aware DES fan-out + predictive dispatch.
+
+Two claims from the PR contract:
+
+1. With ``devices=8``, ``estimate_depth`` fitted on the fan-out
+   ``ModeledBackend`` matches the depth fitted directly on MEASURED
+   ``ShardedEmbedderBackend`` service times (forced 8-device host mesh)
+   within +-1 depth unit — i.e. the fan-out model reproduces the real
+   sharded service curve rather than distorting it (wrong per-device row
+   mapping, wrong chunking, wrong probe alignment all break this), and its
+   per-chunk latency predictions stay within a factor-2 band of an
+   independent measurement run (loose enough for a 2-core CI box, tight
+   enough to kill a model that forgot to divide rows by devices — that one
+   is ~8x off at depth).
+
+2. ``--policy predictive`` beats the cascade on p95 e2e latency at equal
+   concurrency in the DES A/B that lands in
+   ``BENCH_table3_queue_depth.json`` (same depths, same diurnal Poisson
+   trace, deterministic seed).
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:                      # benchmarks/ is a namespace
+    sys.path.insert(0, ROOT)                  # package under the repo root
+
+
+# ------------------------------------------------- predictive vs cascade --
+class TestPredictiveBeatsCascade:
+    def _ab(self):
+        from benchmarks.table3_queue_depth import policy_ab
+
+        return policy_ab(policies=("cascade", "predictive"))
+
+    def test_p95_beats_cascade_at_equal_concurrency(self):
+        ab = self._ab()
+        c, p = ab["cascade"], ab["predictive"]
+        assert p["p95_s"] < c["p95_s"], (p["p95_s"], c["p95_s"])
+        # the margin is deterministic (seeded DES): keep a real gap so a
+        # pricing regression cannot hide inside float jitter
+        assert c["p95_s"] / p["p95_s"] >= 1.05
+
+    def test_predictive_does_not_trade_the_tail_for_rejections(self):
+        ab = self._ab()
+        c, p = ab["cascade"], ab["predictive"]
+        assert p["rejected"] <= c["rejected"]
+        assert p["violations"] < c["violations"]
+        assert p["accepted"] >= c["accepted"]
+
+
+# --------------------------------------------- 8-device depth calibration --
+_SUBPROCESS_PROBE = r"""
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import time
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.core.estimator import (estimate_depth, fanout_probe_points,
+                                  fit_latency)
+from repro.core.routing import Query
+from repro.core.sharded_backend import ShardedEmbedderBackend
+from repro.core.simulator import DeviceModel, profile_fn_for
+from repro.core.windve import ModeledBackend
+from repro.models import embedder
+
+assert len(jax.devices()) == 8
+cfg = get_config("bge-large-zh-v1.5").smoke()
+params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+be = ShardedEmbedderBackend(cfg, params, max_tokens=32, min_seq_bucket=8)
+assert be.device_count == 8
+
+CS = (32, 64, 128, 256)        # single pow2 chunks: 4..32 rows per device
+
+def measure(c, repeats=5):
+    batch = [Query(qid=j, length=24) for j in range(c)]
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        be.embed_batch(batch)
+        best = min(best, time.monotonic() - t0)
+    return best
+
+for c in (24, 48) + CS:        # compile every shape before timing
+    measure(c, repeats=2)
+
+# run A: measured sharded service times -> per-DEVICE Eq. 12 fit -> the
+# fan-out ModeledBackend the DES/calibrator would use for this tier
+tA = [measure(c) for c in CS]
+per_dev = fit_latency([c // 8 for c in CS], tA)
+# ref_length must match the measured query length, or DeviceModel's
+# length scaling silently rescales the fitted compute term by 24/75
+base = DeviceModel("measured-1dev", beta=per_dev.beta, b=per_dev.alpha,
+                   a=0.0, ref_length=24)
+backend = ModeledBackend(base, embed_dim=4, devices=8)
+slo = per_dev.beta + 12.5 * per_dev.alpha / 8          # target depth ~12
+
+d_model, fitm = estimate_depth(
+    profile_fn_for(backend.model, length=24), slo,
+    probe_points=fanout_probe_points(8, (4, 8, 16, 32)))
+
+# the direct fit of the SAME measured service curve against concurrency
+fit_meas = fit_latency(list(CS), tA)
+d_meas = fit_meas.max_concurrency(slo)
+print(f"DEPTHS {d_model} {d_meas}")
+
+# run B: independent measurements (incl. non-pow2 batches that exercise
+# the multi-chunk plan).  Per-point timings on a 2-core box oversubscribed
+# by 8 fake devices jitter by ~2x, so the guard is a factor-4 per-point cap
+# plus a factor-2 geometric-mean cap: random jitter averages out, while a
+# structurally wrong model (per-device rows == C, i.e. fan-out forgotten)
+# is ~8x off at the large batches and fails both.
+import math
+ratios = []
+for c in (24, 48) + CS:
+    want = backend.model.latency(c, 24)
+    got = measure(c, repeats=7)
+    ratio = max(want, got) / max(min(want, got), 1e-9)
+    ratios.append(ratio)
+    print(f"ADEQ {c} model={want*1e3:.2f}ms measured={got*1e3:.2f}ms "
+          f"ratio={ratio:.2f}")
+    assert ratio <= 4.0, (c, want, got)
+gmean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+print(f"ADEQ-GMEAN {gmean:.2f}")
+assert gmean <= 2.0, ratios
+print("FANOUT-8DEV-OK")
+"""
+
+
+def test_eight_device_fanout_depth_matches_measured():
+    """Forced 8-device host mesh in a subprocess (the suite's own jax must
+    keep its single device, see conftest)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src")] +
+        env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROBE],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "FANOUT-8DEV-OK" in proc.stdout
+    depths = [ln for ln in proc.stdout.splitlines()
+              if ln.startswith("DEPTHS")][0].split()
+    d_model, d_meas = int(depths[1]), int(depths[2])
+    assert abs(d_model - d_meas) <= 1, (d_model, d_meas)

@@ -1,0 +1,110 @@
+"""Golden-embedding regression: served vectors pinned against a checked-in
+artifact.
+
+``tests/golden/golden_embed.npz`` carries a tiny seeded embedder param tree,
+8 fixed query payloads and the fp32 vectors the serving stack produced when
+the golden was minted.  Every serving backend must keep reproducing them:
+
+* fp32 (``JaxEmbedderBackend`` / ``BucketedEmbedderBackend`` /
+  ``ShardedEmbedderBackend`` on a 1-device mesh) within 1e-6 — kernel,
+  bucketing or sharding refactors cannot silently drift embeddings;
+* bf16 within its documented 1e-2 cosine bar;
+* int8 within its documented >= 0.99 cosine bar.
+
+The params are LOADED, not regenerated: a jax PRNG change would otherwise
+silently re-mint the baseline and the test would guard nothing.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.bucketing import BucketedEmbedderBackend
+from repro.core.routing import Query
+from repro.core.sharded_backend import ShardedEmbedderBackend
+from repro.core.windve import JaxEmbedderBackend
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "golden_embed.npz")
+MAX_TOKENS = 32
+
+
+def golden_config():
+    return dataclasses.replace(get_config("bge-large-zh-v1.5").smoke(),
+                               name="bge-golden", num_layers=1, d_model=32,
+                               num_heads=2, num_kv_heads=1, head_dim=16,
+                               d_ff=64, vocab_size=128, embed_dim=16)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    data = np.load(GOLDEN)
+    params: dict = {}
+    for key in data.files:
+        if not key.startswith("param:"):
+            continue
+        node, parts = params, key[len("param:"):].split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    queries = [Query(qid=i, payload=data[f"query:{i}"],
+                     length=len(data[f"query:{i}"]))
+               for i in range(8)]
+    return golden_config(), params, queries, data["golden"]
+
+
+def serve(backend, queries):
+    # fresh Query objects: backends must not depend on shared identity
+    out = backend.embed_batch([Query(qid=q.qid, payload=q.payload,
+                                     length=q.length) for q in queries])
+    return np.stack(out)
+
+
+def max_cosine_distance(a, b):
+    return float((1.0 - (a * b).sum(-1) /
+                  (np.linalg.norm(a, axis=-1) *
+                   np.linalg.norm(b, axis=-1))).max())
+
+
+class TestFp32Golden:
+    @pytest.mark.parametrize("backend_cls,kw", [
+        (JaxEmbedderBackend, {}),
+        (BucketedEmbedderBackend, {"min_seq_bucket": 8}),
+        (ShardedEmbedderBackend, {"min_seq_bucket": 8}),
+    ])
+    def test_fp32_backends_match_golden(self, golden, backend_cls, kw):
+        cfg, params, queries, want = golden
+        be = backend_cls(cfg, params, max_tokens=MAX_TOKENS, dtype="fp32",
+                         **kw)
+        if backend_cls is ShardedEmbedderBackend:
+            assert be.device_count == 1
+        got = serve(be, queries)
+        assert got.dtype == np.float32
+        np.testing.assert_allclose(got, want, atol=1e-6,
+                                   err_msg=f"{backend_cls.__name__} drifted "
+                                           f"from the checked-in golden")
+
+    def test_golden_vectors_are_unit_norm(self, golden):
+        *_, want = golden
+        np.testing.assert_allclose(np.linalg.norm(want, axis=-1), 1.0,
+                                   atol=1e-5)
+
+
+class TestReducedPrecisionBars:
+    def test_bf16_within_documented_cosine_bar(self, golden):
+        cfg, params, queries, want = golden
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    min_seq_bucket=8, dtype="bf16")
+        got = serve(be, queries)
+        assert got.dtype == np.float32          # fp32 pool_norm epilogue
+        assert max_cosine_distance(got, want) <= 1e-2
+
+    def test_int8_within_documented_cosine_bar(self, golden):
+        cfg, params, queries, want = golden
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    min_seq_bucket=8, dtype="int8")
+        got = serve(be, queries)
+        assert got.dtype == np.float32
+        assert max_cosine_distance(got, want) <= 0.01   # >= 0.99 cosine

@@ -1,0 +1,212 @@
+"""Property-based cross-driver parity: random topologies, both drivers.
+
+``tests/test_parity.py`` spot-checks engine-vs-DES agreement on hand-picked
+configs; this suite generates random (tier count, depths, bucket_fn, policy,
+devices, max_batch, query lengths) configurations and asserts the two
+drivers of the shared scheduling core agree on
+
+* routed counts per tier (``Telemetry.dispatched``),
+* rejection (BUSY) counts,
+* per-tier batch-size distributions (the batches each driver actually
+  formed through ``QueueManager.pop_batch``).
+
+Determinism notes: the threaded engine's dispatch sequence matches the DES
+only if the whole burst is submitted before any worker acts.  Submission is
+pure Python (no blocking calls release the GIL), so raising
+``sys.setswitchinterval`` for the ~ms submission loop keeps the main thread
+scheduled until every query is dispatched — workers then drain a static
+backlog exactly like the DES does after its same-instant arrival events.
+Runs under real ``hypothesis`` when installed, else the deterministic
+seeded stub in ``tests/_hypothesis_stub.py``.
+"""
+import sys
+from collections import defaultdict
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bucketing import length_bucket_fn
+from repro.core.routing import (CascadePolicy, LeastLoadedPolicy,
+                                LengthAwarePolicy, PredictivePolicy,
+                                TierSpec)
+from repro.core.simulator import (DeviceModel, ServingSimulator,
+                                  sharded_model)
+from repro.core.windve import ModeledBackend, WindVE
+
+# flat (b = a = 0) noise-free service curves: latency is beta per execution
+# chunk, slow enough that a burst outlives its submission window, fast
+# enough to keep 10 random examples quick.  Tier i gets a distinct beta so
+# predictive/least-loaded orderings are non-trivial.
+TIER_BETAS = (0.12, 0.18, 0.24)
+BUCKET = length_bucket_fn(min_bucket=32, max_bucket=128)
+
+
+class RecordingModel:
+    """Wraps any DES latency model and records each serviced batch size."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.batches = []
+
+    def __getattr__(self, name):            # name/noise_std/ref_length/...
+        return getattr(self.inner, name)
+
+    def latency(self, concurrency, length=75, rng=None):
+        self.batches.append(int(concurrency))
+        return self.inner.latency(concurrency, length, rng)
+
+
+def make_policy(kind, models):
+    if kind == "cascade":
+        return CascadePolicy()
+    if kind == "length-aware":
+        return LengthAwarePolicy(long_threshold=200)
+    if kind == "least-loaded":
+        return LeastLoadedPolicy()
+    if kind == "predictive":
+        # the DES device models double as the calibrated fits — identical
+        # pricing in both drivers by construction
+        return PredictivePolicy(fits=dict(models))
+    raise ValueError(kind)
+
+
+def base_models(n_tiers, devices):
+    out = {}
+    for i in range(n_tiers):
+        base = DeviceModel(f"T{i}", beta=TIER_BETAS[i], b=0.0, a=0.0)
+        out[f"T{i}"] = sharded_model(base, devices if i == 0 else 1)
+    return out
+
+
+def run_des(n_tiers, depths, models, policy_kind, bucketed, max_batch,
+            lengths):
+    recorders = {name: RecordingModel(m) for name, m in models.items()}
+    tiers = [TierSpec(f"T{i}", depths[i], model=recorders[f"T{i}"],
+                      max_batch=max_batch,
+                      bucket_fn=BUCKET if bucketed else None)
+             for i in range(n_tiers)]
+    sim = ServingSimulator(tiers=tiers, slo_s=100.0,
+                           policy=make_policy(policy_kind, models))
+    res = sim.run([(0.0, ln) for ln in lengths])
+    batches = {name: sorted(r.batches) for name, r in recorders.items()}
+    return dict(res.dispatched), res.rejected, res.n_completed, batches
+
+
+def run_engine(n_tiers, depths, models, policy_kind, bucketed, max_batch,
+               lengths):
+    tiers = [TierSpec(f"T{i}", depths[i],
+                      backend=ModeledBackend(
+                          DeviceModel(f"T{i}", beta=TIER_BETAS[i], b=0.0,
+                                      a=0.0),
+                          embed_dim=4,
+                          devices=getattr(models[f"T{i}"], "devices", 1)),
+                      max_batch=max_batch,
+                      bucket_fn=BUCKET if bucketed else None)
+             for i in range(n_tiers)]
+    ve = WindVE(tiers=tiers, policy=make_policy(policy_kind, models))
+    seen = defaultdict(list)
+    ve.add_batch_hook(lambda tier, batch, lat: seen[tier].append(len(batch)))
+    old = sys.getswitchinterval()
+    try:
+        # hold the GIL across the burst: no worker may form a batch until
+        # every query of the burst has been dispatched (see module docs)
+        sys.setswitchinterval(5.0)
+        try:
+            futs = [ve.submit(length=ln) for ln in lengths]
+        finally:
+            sys.setswitchinterval(old)
+        done = [f.result(timeout=60) for f in futs if f is not None]
+        disp, rej = dict(ve.stats.dispatched), ve.stats.rejected
+    finally:
+        sys.setswitchinterval(old)
+        ve.shutdown()
+    return disp, rej, len(done), {t: sorted(b) for t, b in seen.items()}
+
+
+CONFIG = st.tuples(
+    st.integers(min_value=1, max_value=3),                  # tier count
+    st.tuples(st.integers(min_value=0, max_value=8),        # per-tier depths
+              st.integers(min_value=1, max_value=8),        # (tier 0 may be
+              st.integers(min_value=1, max_value=6)),       #  full: depth 0)
+    st.booleans(),                                          # bucket_fn on?
+    st.sampled_from(["cascade", "length-aware", "least-loaded",
+                     "predictive"]),
+    st.sampled_from([1, 2, 4]),                             # tier-0 devices
+    st.sampled_from([None, 2, 4]),                          # max_batch cap
+    st.lists(st.integers(min_value=5, max_value=400),       # query lengths
+             min_size=1, max_size=18),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(CONFIG)
+def test_engine_and_des_agree_on_random_configs(cfg):
+    n_tiers, all_depths, bucketed, policy_kind, devices, max_batch, \
+        lengths = cfg
+    depths = list(all_depths[:n_tiers])
+    if all(d == 0 for d in depths):
+        depths[-1] = 1          # at least one admitting tier keeps the
+        #                         engine run bounded AND meaningful
+    models = base_models(n_tiers, devices)
+
+    s_disp, s_rej, s_done, s_batches = run_des(
+        n_tiers, depths, models, policy_kind, bucketed, max_batch, lengths)
+    e_disp, e_rej, e_done, e_batches = run_engine(
+        n_tiers, depths, models, policy_kind, bucketed, max_batch, lengths)
+
+    assert e_disp == s_disp, (cfg, e_disp, s_disp)
+    assert e_rej == s_rej, (cfg, e_rej, s_rej)
+    assert e_done == s_done == sum(s_disp.values())
+
+    # per-tier batch-size distributions: the batches the two drivers formed
+    # through the shared pop_batch must be the same multiset
+    for i in range(n_tiers):
+        name = f"T{i}"
+        assert e_batches.get(name, []) == s_batches.get(name, []), \
+            (cfg, name, e_batches.get(name), s_batches.get(name))
+        cap = max_batch if max_batch else max(1, depths[i])
+        assert all(b <= cap for b in s_batches.get(name, []))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["cascade", "length-aware", "least-loaded",
+                        "predictive"]),
+       st.lists(st.integers(min_value=5, max_value=400),
+                min_size=2, max_size=14))
+def test_bucketed_batches_single_bucket_both_drivers(policy_kind, lengths):
+    """With a bucket_fn, EVERY batch either driver forms is single-bucket
+    (the contract that lets backends pad to the bucket, not a straggler)."""
+    models = base_models(2, 1)
+    tiers = [TierSpec("T0", 4, model=RecordingModel(models["T0"]),
+                      bucket_fn=BUCKET),
+             TierSpec("T1", 4, model=RecordingModel(models["T1"]),
+                      bucket_fn=BUCKET)]
+    sim = ServingSimulator(tiers=tiers, slo_s=100.0,
+                           policy=make_policy(policy_kind, models))
+    res = sim.run([(0.0, ln) for ln in lengths])
+    assert res.n_completed == sum(res.dispatched.values())
+
+    eng_tiers = [TierSpec(f"T{i}", 4,
+                          backend=ModeledBackend(
+                              DeviceModel(f"T{i}", beta=TIER_BETAS[i],
+                                          b=0.0, a=0.0), embed_dim=4),
+                          bucket_fn=BUCKET) for i in range(2)]
+    ve = WindVE(tiers=eng_tiers, policy=make_policy(policy_kind, models))
+    batches = []
+    ve.add_batch_hook(lambda tier, batch, lat: batches.append(list(batch)))
+    old = sys.getswitchinterval()
+    try:
+        sys.setswitchinterval(5.0)
+        try:
+            futs = [ve.submit(length=ln) for ln in lengths]
+        finally:
+            sys.setswitchinterval(old)
+        for f in futs:
+            if f is not None:
+                f.result(timeout=60)
+    finally:
+        sys.setswitchinterval(old)
+        ve.shutdown()
+    for batch in batches:
+        assert len({BUCKET(q) for q in batch}) == 1, \
+            [(q.qid, q.length) for q in batch]

@@ -236,3 +236,95 @@ class TestTelemetryUnification:
         assert DispatchStats is Telemetry
         assert EngineStats is Telemetry
         assert SimResult is Telemetry
+
+
+class TestPredictivePolicy:
+    """Latency-predictive dispatch: minimal predicted completion time
+    (queue backlog priced on the tier's calibrated service curve)."""
+
+    def _fits(self):
+        from repro.core.simulator import DeviceModel
+
+        # fast: t(c) = 0.2 + 0.01c ; slow: t(c) = 0.5 + 0.05c
+        return {NPU: DeviceModel("fast", beta=0.2, b=0.01, a=0.0),
+                CPU: DeviceModel("slow", beta=0.5, b=0.05, a=0.0)}
+
+    def _qm(self, policy, d_npu=10, d_cpu=10):
+        return QueueManager([TierSpec(NPU, d_npu), TierSpec(CPU, d_cpu)],
+                            policy=policy)
+
+    def test_prefers_fast_tier_when_idle(self):
+        from repro.core.routing import PredictivePolicy
+
+        qm = self._qm(PredictivePolicy(fits=self._fits()))
+        assert qm.dispatch(q(1)) == NPU
+
+    def test_spills_when_backlog_prices_fast_tier_above_slow(self):
+        from repro.core.routing import PredictivePolicy
+
+        qm = self._qm(PredictivePolicy(fits=self._fits()), d_npu=100)
+        # fast predicted passes slow t(1)=0.55 at backlog 34:
+        # 0.2 + 0.01*(34+1) = 0.55
+        got = [qm.dispatch(q(i)) for i in range(40)]
+        assert got[:34] == [NPU] * 34
+        assert got[35] == CPU        # backlog 35 -> 0.56 > 0.55
+        assert CPU in got
+
+    def test_unfitted_tiers_trail_in_cascade_order(self):
+        from repro.core.routing import PredictivePolicy
+
+        fits = {CPU: self._fits()[CPU]}       # NPU never calibrated
+        qm = self._qm(PredictivePolicy(fits=fits), d_cpu=2)
+        # CPU has a fit -> priced and preferred; NPU only as overflow
+        assert [qm.dispatch(q(i)) for i in range(3)] == [CPU, CPU, NPU]
+
+    def test_no_fits_degrades_to_cascade(self):
+        from repro.core.routing import PredictivePolicy
+
+        qm = self._qm(PredictivePolicy(), d_npu=2, d_cpu=2)
+        assert [qm.dispatch(q(i)) for i in range(5)] == \
+            [NPU, NPU, CPU, CPU, BUSY]
+
+    def test_per_bucket_fits_override_tier_fit(self):
+        from repro.core.bucketing import length_bucket_fn
+        from repro.core.routing import PredictivePolicy
+        from repro.core.simulator import DeviceModel
+
+        bucket = length_bucket_fn(min_bucket=32, max_bucket=128)
+        pol = PredictivePolicy(fits=self._fits(), bucket_fn=bucket)
+        # long queries are catastrophically slow on the slow tier (5.4):
+        # install a per-bucket fit that prices bucket-128 CPU service high
+        pol.update(CPU, DeviceModel("slow@128", beta=9.0, b=0.5, a=0.0),
+                   bucket=128)
+        qm = self._qm(pol, d_npu=100)
+        assert qm.dispatch(q(1, length=120)) == NPU     # priced per bucket
+        for i in range(2, 40):
+            qm.dispatch(q(i, length=120))
+        # long queries stay off the poisoned bucket while the fast tier has
+        # room (the policy orders candidates; admission stays depth-bound)
+        assert qm.stats.dispatched.get(CPU, 0) == 0
+        # short queries still use the CPU's tier-level fit and spill there
+        # once the fast tier's backlog prices above it
+        assert qm.dispatch(q(50, length=10)) == CPU
+
+    def test_update_swaps_fit_atomically(self):
+        from repro.core.routing import PredictivePolicy
+        from repro.core.simulator import DeviceModel
+
+        pol = PredictivePolicy(fits=self._fits())
+        qm = self._qm(pol)
+        assert qm.dispatch(q(1)) == NPU
+        # online calibrator observed the fast tier collapsing: refit flips
+        # the ordering for the very next dispatch
+        pol.update(NPU, DeviceModel("degraded", beta=2.0, b=0.2, a=0.0))
+        assert qm.dispatch(q(2)) == CPU
+
+    def test_latency_fit_objects_work_as_fits(self):
+        from repro.core.estimator import fit_latency
+        from repro.core.routing import PredictivePolicy
+
+        fit = fit_latency([1, 4, 16], [0.21, 0.24, 0.36])
+        pol = PredictivePolicy(fits={NPU: fit})
+        qm = self._qm(pol)
+        p = pol.predicted_completion_s(NPU, q(1), qm)
+        assert p == pytest.approx(fit.alpha + fit.beta, abs=1e-9)

@@ -197,6 +197,120 @@ class TestShardedBackendSingleDevice:
             ShardedEmbedderBackend(cfg, params, dtype="fp16")
 
 
+# ----------------------------------------------- staging overrun guard --
+class TestStagingOverrun:
+    """The ROADMAP's 'fetch at most 2 batches late' discipline, enforced:
+    more concurrent staged-but-unfetched batches than the ring has slots
+    must raise a clear error (never serve rotated embeddings)."""
+
+    def _batches(self, cfg, n, base=0):
+        rng = np.random.default_rng(100 + base)
+        return [[Query(qid=base * 100 + i * 10 + j,
+                       payload=rng.integers(1, cfg.vocab_size, 10),
+                       length=10) for j in range(4)] for i in range(n)]
+
+    def test_three_workers_default_slots_raise_clearly_or_serve_correct(
+            self, bge_smoke):
+        import threading
+
+        cfg, params = bge_smoke
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        oracle = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        barrier = threading.Barrier(3, timeout=30)
+        errors, served = [], []
+        lock = threading.Lock()
+
+        def worker(tid):
+            b0, b1 = self._batches(cfg, 2, base=tid)
+            f0 = be.embed_batch_async(b0)       # 3 staged, none fetched
+            barrier.wait()
+            err = f1 = None
+            try:
+                f1 = be.embed_batch_async(b1)   # 4th-6th staging: overrun
+            except RuntimeError as e:
+                err = e
+            barrier.wait()  # every thread attempts round 2 BEFORE any fetch
+            if err is not None:
+                with lock:
+                    errors.append(err)
+                f0()                            # release what we hold
+                return
+            with lock:
+                served.append((b0, f0()))
+                served.append((b1, f1()))
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        # default staging_slots (4) covers 2 double-buffered workers; three
+        # must either trip the guard loudly or still serve correct vectors
+        assert errors, "3 workers on default staging_slots went unguarded"
+        for e in errors:
+            assert "staging_slots" in str(e) and "overrun" in str(e)
+        for batch, embs in served:              # survivors stay correct
+            want = oracle.embed_batch(batch)
+            np.testing.assert_allclose(np.stack(embs), np.stack(want),
+                                       atol=1e-5)
+
+    def _drive(self, be, cfg, n_workers, n_batches):
+        import threading
+
+        errors, served = [], []
+        lock = threading.Lock()
+
+        def worker(tid):
+            pending = None
+            try:
+                for batch in self._batches(cfg, n_batches, base=tid):
+                    fetch = be.embed_batch_async(batch)
+                    if pending is not None:
+                        pb, pf = pending
+                        with lock:
+                            served.append((pb, pf()))
+                    pending = (batch, fetch)
+                if pending is not None:
+                    pb, pf = pending
+                    with lock:
+                        served.append((pb, pf()))
+            except Exception as e:              # pragma: no cover - fail path
+                with lock:
+                    errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        return errors, served
+
+    def test_two_workers_double_buffering_never_trips_the_guard(
+            self, bge_smoke):
+        cfg, params = bge_smoke
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        oracle = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+        errors, served = self._drive(be, cfg, n_workers=2, n_batches=6)
+        assert not errors, errors
+        assert len(served) == 12
+        for batch, embs in served:
+            np.testing.assert_allclose(
+                np.stack(embs), np.stack(oracle.embed_batch(batch)),
+                atol=1e-5)
+        assert not be._staging_pending          # accounting drained
+
+    def test_raised_staging_slots_covers_three_workers(self, bge_smoke):
+        cfg, params = bge_smoke
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    staging_slots=6)     # 2 x 3 workers
+        errors, served = self._drive(be, cfg, n_workers=3, n_batches=5)
+        assert not errors, errors
+        assert len(served) == 15
+        assert not be._staging_pending
+
+
 # ------------------------------------------------ engine double buffering --
 class TestEngineAsyncWorker:
     def test_async_backend_serves_correct_futures(self, bge_smoke):

@@ -83,3 +83,158 @@ class TestDES:
         mid = [t for t, _ in tr if 15 <= t < 45]
         edge = [t for t, _ in tr if t < 15 or t >= 45]
         assert len(mid) > len(edge)
+
+
+class TestFanOutModel:
+    """DES-side sharded NPU tier: the fan-out service curve (per-device pow2
+    chunks + gather overhead) the depth estimator now calibrates against."""
+
+    def _base(self):
+        return DeviceModel("dev", beta=0.25, b=0.02, a=0.0)
+
+    def test_one_device_is_the_base_model_itself(self):
+        from repro.core.simulator import sharded_model
+
+        base = self._base()
+        assert sharded_model(base, 1) is base     # bitwise PR 2 degrade
+
+    def test_rejects_non_pow2_and_single_device(self):
+        from repro.core.simulator import FanOutModel
+
+        with pytest.raises(ValueError):
+            FanOutModel(self._base(), 3)
+        with pytest.raises(ValueError):
+            FanOutModel(self._base(), 1)
+
+    def test_chunk_plan_mirrors_bucketed_batch_plan(self):
+        from repro.core.bucketing import BucketedEmbedderBackend
+        from repro.core.simulator import FanOutModel
+
+        f = FanOutModel(self._base(), 4)
+        plan = BucketedEmbedderBackend._batch_plan
+        class Stub:  # borrow the real planner with the mesh-floored bucket
+            min_batch_bucket = 4
+        for batch in (1, 3, 4, 5, 8, 13, 20, 21, 64, 100):
+            assert f.chunk_plan(batch) == plan(Stub(), batch), batch
+
+    def test_per_device_rows_set_the_latency(self):
+        from repro.core.simulator import FanOutModel
+
+        base = self._base()
+        f8 = FanOutModel(base, 8)
+        # batch 64 -> one chunk of 64 -> 8 rows per device
+        assert f8.latency(64) == pytest.approx(base.latency(8))
+        # batch 8 -> 1 row per device
+        assert f8.latency(8) == pytest.approx(base.latency(1))
+
+    def test_gather_overhead_scales_with_log_devices(self):
+        from repro.core.simulator import FanOutModel
+
+        base = self._base()
+        f2 = FanOutModel(base, 2, fanout_beta_s=0.01)
+        f8 = FanOutModel(base, 8, fanout_beta_s=0.01)
+        assert f2.overhead_s == pytest.approx(0.01)
+        assert f8.overhead_s == pytest.approx(0.03)
+        assert f8.latency(8) == pytest.approx(base.latency(1) + 0.03)
+
+    def test_multi_chunk_batches_serialize(self):
+        from repro.core.simulator import FanOutModel
+
+        base = self._base()
+        f4 = FanOutModel(base, 4)
+        # 20 -> chunks [16, 4] -> rows 4 then 1, executed back to back
+        assert f4.chunk_plan(20) == [16, 4]
+        assert f4.latency(20) == pytest.approx(base.latency(4) +
+                                               base.latency(1))
+
+    def test_noisy_fanout_takes_the_straggler(self):
+        import random
+
+        from repro.core.simulator import FanOutModel
+
+        base = DeviceModel("noisy", beta=0.25, b=0.02, a=0.0, noise_std=0.2)
+        f8 = FanOutModel(base, 8)
+        rng1, rng2 = random.Random(3), random.Random(3)
+        # the straggler max over 8 independent draws dominates one draw
+        one = [base.latency(8, rng=rng1) for _ in range(64)]
+        fan = [f8.latency(64, rng=rng2) for _ in range(64)]
+        assert sum(fan) / len(fan) > sum(one) / len(one)
+
+    def test_estimated_depth_scales_near_linear_with_devices(self):
+        from repro.core.cost_model import fanout_efficiency
+        from repro.core.estimator import (estimate_depth,
+                                          fanout_probe_points)
+        from repro.core.simulator import sharded_model
+
+        base = self._base()
+        d1, _ = estimate_depth(profile_fn_for(base), 1.0)
+        for n in (2, 4, 8):
+            m = sharded_model(base, n, fanout_beta_s=0.004)
+            dn, _ = estimate_depth(profile_fn_for(m), 1.0,
+                                   probe_points=fanout_probe_points(n))
+            assert 0.8 <= fanout_efficiency(dn, d1, n) <= 1.1, (n, dn, d1)
+
+    def test_closed_form_matches_estimator_on_linear_base(self):
+        from repro.core.cost_model import fanout_depth
+        from repro.core.estimator import (estimate_depth,
+                                          fanout_probe_points)
+        from repro.core.simulator import sharded_model
+
+        base = self._base()
+        for n in (2, 8):
+            m = sharded_model(base, n, fanout_beta_s=0.005)
+            dn, _ = estimate_depth(profile_fn_for(m), 1.0,
+                                   probe_points=fanout_probe_points(n))
+            closed = fanout_depth(base.b, base.beta, n, 1.0,
+                                  overhead_s=m.overhead_s)
+            assert abs(dn - closed) <= max(1, n), (n, dn, closed)
+
+    def test_modeled_backend_devices_wraps_the_model(self):
+        from repro.core.simulator import FanOutModel
+        from repro.core.windve import ModeledBackend
+
+        base = self._base()
+        be1 = ModeledBackend(base, embed_dim=4)
+        be8 = ModeledBackend(base, embed_dim=4, devices=8)
+        assert be1.model is base
+        assert isinstance(be8.model, FanOutModel)
+        assert be8.model.devices == 8 and "8dev" in be8.name
+
+
+class TestSeededDeterminism:
+    """Every BENCH comparison rests on DES runs being replayable: the same
+    seed must reproduce the identical Telemetry.summary(), including noisy
+    devices, fan-out straggler sampling and Poisson diurnal arrivals."""
+
+    def _summary(self, seed, trace_seed=11):
+        from repro.core.queue_manager import Query  # noqa: F401
+        from repro.core.routing import TierSpec
+        from repro.core.simulator import sharded_model
+
+        npu = PAPER_DEVICES["atlas-300i-duo/bge"]     # noise_std = 0.03
+        cpu = PAPER_DEVICES["kunpeng-920/bge"]        # noise_std = 0.05
+        arrivals = diurnal_trace(30, 4.0, 40.0, seed=trace_seed)
+        tiers = [TierSpec(NPU, 84, model=sharded_model(npu, 4, 0.004)),
+                 TierSpec(CPU, 2, model=cpu)]
+        sim = ServingSimulator(tiers=tiers, slo_s=1.0, seed=seed)
+        return sim.run(list(arrivals)).summary()
+
+    def test_same_seed_identical_summaries(self):
+        a, b = self._summary(seed=7), self._summary(seed=7)
+        assert a == b
+        assert a["completed"] > 0 and a["p95_s"] > 0.0
+
+    def test_different_sim_seed_changes_noisy_latencies(self):
+        a, b = self._summary(seed=7), self._summary(seed=8)
+        # same arrivals, different device-noise draws: tails move
+        assert a["accepted"] == b["accepted"]
+        assert a != b
+
+    def test_different_trace_seed_changes_arrivals(self):
+        a = self._summary(seed=7, trace_seed=11)
+        b = self._summary(seed=7, trace_seed=12)
+        assert a["accepted"] != b["accepted"] or a != b
+
+    def test_diurnal_trace_is_seed_deterministic(self):
+        assert diurnal_trace(45, 3, 25, seed=5) == \
+            diurnal_trace(45, 3, 25, seed=5)
