@@ -1,7 +1,7 @@
-"""Int8 weight-only quantized CPU-tier serving A/B: throughput, parity,
-recompiles and resident-weight footprint for ``embed_dtype=int8``.
+"""Quantized CPU-tier serving A/B: throughput, parity, recompiles and
+resident-weight footprint for ``embed_dtype=int8`` and ``int8_w8a8``.
 
-The SAME bucketed batch stream is warm-served two ways at IDENTICAL
+The SAME bucketed batch stream is warm-served three ways at IDENTICAL
 (B, S) bucket shapes through the real serving backend
 (``repro.core.sharded_backend``, 1-device mesh == the CPU-tier path):
 
@@ -9,7 +9,10 @@ The SAME bucketed batch stream is warm-served two ways at IDENTICAL
 * int8 — weight-only quantized projections (int8 weights + fp32
          per-output-channel scales) through the fused quant matmul
          (``repro.kernels.quant_matmul``), fp32 activations, fp32
-         ``pool_norm`` epilogue.
+         ``pool_norm`` epilogue;
+* int8_w8a8 — int8 weights AND per-batch dynamically quantized int8
+         activations contracted with int32 accumulation, one fp32 dequant
+         in the tile epilogue, fp32 ``pool_norm`` epilogue.
 
 Self-asserting regression guards (CI runs ``--smoke``; a raise exits
 non-zero):
@@ -23,16 +26,22 @@ non-zero):
   regression in the quantized path itself still fails the build
   everywhere.  The probe, the measured ratio and the applied bar are all
   printed (PR 3's core-aware-bar convention: no silent environment caps).
-* **parity** — int8 embeddings >= 0.99 cosine vs the fp32 oracle on BOTH
-  pooling modes (cls / mean) — the served-vector contract.
-* **zero steady-state recompiles** after prewarm, and the int8 stream must
-  execute the SAME bucket set as the fp32 stream (equal shapes, equal
-  compile-cache behaviour).
+* **parity** — int8 embeddings >= 0.99 and int8_w8a8 >= 0.98 cosine vs the
+  fp32 oracle on BOTH pooling modes (cls / mean) — the served-vector
+  contract.
+* **zero steady-state recompiles** after prewarm, and both quantized
+  streams must execute the SAME bucket set as the fp32 stream (equal
+  shapes, equal compile-cache behaviour).
 * **footprint** — resident serving weights shrink >= 2.5x (projections are
-  1 byte/element; the embedding table, norms and scales stay float).
+  1 byte/element; the embedding table, norms and scales stay float), and
+  int8_w8a8 is byte-identical to int8 at rest (activation quantization is
+  a trace-time choice, not a second weight copy).
 
-Also emits ``BENCH_quant_embed.json`` (throughput, p95, parity, probe) so
-the perf trajectory is tracked across PRs.
+Also emits ``BENCH_quant_embed.json`` (throughput, p95, parity, probes,
+``w8a8_slope_scale`` — the measured quantized/fp32 per-query service-time
+ratio that ``repro.core.estimator.quantized_fit`` consumes to re-price
+Eq. 12 depth for the quantized tier) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -107,6 +116,33 @@ def _gemm_probe(jnp, M: int, K: int, N: int, repeats: int = 10) -> float:
     return best(f32, x, w) / best(quant_matmul, x, w8, scale)
 
 
+def _gemm_probe_w8a8(jnp, M: int, K: int, N: int, repeats: int = 10,
+                     ) -> float:
+    """Host physics for the W8A8 formulation: t(f32 matmul) / t(dynamic
+    activation quant + int8 x int8 int32-accumulation matmul + dequant)."""
+    import jax
+
+    from repro.kernels.quant_matmul import quant_matmul_w8a8
+    from repro.models.quantize import quantize_dense
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    w8, scale = quantize_dense(w)
+    f32 = jax.jit(lambda a, b: a @ b)
+
+    def best(fn, *args) -> float:
+        jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    return best(f32, x, w) / best(quant_matmul_w8a8, x, w8, scale)
+
+
 def run(smoke: bool = False) -> list[Row]:
     import jax
     import jax.numpy as jnp
@@ -138,97 +174,180 @@ def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     f32_be = make("fp32")
     i8_be = make("int8")
-    warm_f32, warm_i8 = f32_be.traces, i8_be.traces
+    aa_be = make("int8_w8a8")
+    warm_f32, warm_i8, warm_aa = f32_be.traces, i8_be.traces, aa_be.traces
 
-    # --- host GEMM physics probe (arms the acceptance bar) ---------------
+    # --- host GEMM physics probes (arm the acceptance bars) --------------
     probe = _gemm_probe(jnp, batch * 32, cfg.d_model, cfg.d_ff)
+    probe_aa = _gemm_probe_w8a8(jnp, batch * 32, cfg.d_model, cfg.d_ff)
     hw_int8 = probe >= 1.6
+    hw_w8a8 = probe_aa >= 1.6
     # the serving path must retain >= 80% of whatever the host's GEMM-level
-    # int8:f32 physics allows; once the hardware win is there, the full
-    # 1.5x acceptance bar applies
+    # quantized:f32 physics allows; once the hardware win is there, the
+    # full 1.5x acceptance bar applies
     required = 1.5 if hw_int8 else 0.8 * probe
+    required_aa = 1.5 if hw_w8a8 else 0.8 * probe_aa
 
     # --- warm-serve throughput at identical bucket shapes ----------------
     _serve(f32_be, batches[:2])           # warm the timing path
     _serve(i8_be, batches[:2])
+    _serve(aa_be, batches[:2])
     qps_f32 = max(_serve(f32_be, batches)[0] for _ in range(2))
     qps_i8, lats = 0.0, []
     for _ in range(2):
         q, ls = _serve(i8_be, batches)
         if q > qps_i8:
             qps_i8, lats = q, ls
+    qps_aa, lats_aa = 0.0, []
+    for _ in range(2):
+        q, ls = _serve(aa_be, batches)
+        if q > qps_aa:
+            qps_aa, lats_aa = q, ls
     ratio = qps_i8 / qps_f32
+    ratio_aa = qps_aa / qps_f32
+    # per-query service time ratio: the beta_s slope transform Eq. 12's
+    # quantized_fit consumes (< 1 when the W8A8 formulation is faster)
+    slope_scale = qps_f32 / qps_aa
     p95 = float(np.percentile(lats, 95))
+    p95_aa = float(np.percentile(lats_aa, 95))
     note = (" — int8 hardware win" if hw_int8 else
             ": no int8 GEMM routing on this host, 1.5x bar arms at "
             ">=1.6x probe")
+    note_aa = (" — W8A8 hardware win" if hw_w8a8 else
+               ": no int8 GEMM routing on this host, 1.5x bar arms at "
+               ">=1.6x probe")
     rows.append(("quant/throughput", 1e6 / qps_i8,
                  f"int8 {qps_i8:.0f} q/s vs fp32 {qps_f32:.0f} q/s = "
                  f"{ratio:.2f}x (bar {required:.2f}x; host int8:f32 GEMM "
                  f"probe {probe:.2f}x{note})"))
+    rows.append(("quant/throughput-w8a8", 1e6 / qps_aa,
+                 f"w8a8 {qps_aa:.0f} q/s vs fp32 {qps_f32:.0f} q/s = "
+                 f"{ratio_aa:.2f}x (bar {required_aa:.2f}x; host w8a8:f32 "
+                 f"GEMM probe {probe_aa:.2f}x{note_aa})"))
     rows.append(("quant/batch-p95", p95 * 1e6,
                  f"int8 warm-serve per-batch p95 = {p95*1e3:.1f}ms "
                  f"over {len(lats)} batches"))
+    rows.append(("quant/batch-p95-w8a8", p95_aa * 1e6,
+                 f"w8a8 warm-serve per-batch p95 = {p95_aa*1e3:.1f}ms "
+                 f"over {len(lats_aa)} batches"))
+    rows.append(("quant/w8a8-slope-scale", 0.0,
+                 f"measured W8A8/fp32 per-query service-time ratio "
+                 f"{slope_scale:.3f} (feeds estimator.quantized_fit to "
+                 f"re-price Eq. 12 depth for the quantized tier)"))
 
     # --- identical bucket shapes + zero steady-state recompiles ----------
-    retraces = (f32_be.traces - warm_f32) + (i8_be.traces - warm_i8)
-    served = 2 * (2 + 2 * len(batches))   # per backend: 2 warm-up + 2 passes
+    retraces = ((f32_be.traces - warm_f32) + (i8_be.traces - warm_i8)
+                + (aa_be.traces - warm_aa))
+    served = 3 * (2 + 2 * len(batches))   # per backend: 2 warm-up + 2 passes
+    buckets_equal = (sorted(i8_be.warm_buckets) == sorted(f32_be.warm_buckets)
+                     == sorted(aa_be.warm_buckets))
     rows.append(("quant/serving-recompiles", 0.0,
                  f"{retraces} retraces over {served} served "
-                 f"batches after prewarm (0 required); bucket sets equal: "
-                 f"{sorted(i8_be.warm_buckets) == sorted(f32_be.warm_buckets)}"))
+                 f"batches after prewarm (0 required); bucket sets equal "
+                 f"across fp32/int8/w8a8: {buckets_equal}"))
 
-    # --- int8 vs fp32-oracle cosine parity, BOTH pooling modes -----------
+    # --- quantized vs fp32-oracle cosine parity, BOTH pooling modes ------
     eq = _batches(1, 8, seed=7)[0]
-    worst = {}
+    worst: dict = {"int8": {}, "int8_w8a8": {}}
     for pool in ("cls", "mean"):
         pcfg = cfg.replace(pool=pool)
         oracle = ShardedEmbedderBackend(pcfg, params, max_tokens=MAX_TOKENS,
                                         devices=jax.local_devices()[:1],
                                         dtype="fp32",
                                         min_seq_bucket=MIN_SEQ_BUCKET)
-        quant = ShardedEmbedderBackend(pcfg, params, max_tokens=MAX_TOKENS,
-                                       devices=jax.local_devices()[:1],
-                                       dtype="int8",
-                                       min_seq_bucket=MIN_SEQ_BUCKET)
         a = np.stack(oracle.embed_batch(eq))
-        b = np.stack(quant.embed_batch(eq))
-        worst[pool] = float(((a * b).sum(-1)
-                             / (np.linalg.norm(a, axis=-1)
-                                * np.linalg.norm(b, axis=-1))).min())
+        for dtype in ("int8", "int8_w8a8"):
+            quant = ShardedEmbedderBackend(pcfg, params,
+                                           max_tokens=MAX_TOKENS,
+                                           devices=jax.local_devices()[:1],
+                                           dtype=dtype,
+                                           min_seq_bucket=MIN_SEQ_BUCKET)
+            b = np.stack(quant.embed_batch(eq))
+            worst[dtype][pool] = float(((a * b).sum(-1)
+                                        / (np.linalg.norm(a, axis=-1)
+                                           * np.linalg.norm(b, axis=-1))
+                                        ).min())
     rows.append(("quant/parity", 0.0,
-                 f"min cosine vs fp32 oracle: cls={worst['cls']:.5f} "
-                 f"mean={worst['mean']:.5f} (>= 0.99 required; served "
-                 f"vectors stay fp32 unit vectors)"))
+                 f"min cosine vs fp32 oracle: "
+                 f"cls={worst['int8']['cls']:.5f} "
+                 f"mean={worst['int8']['mean']:.5f} (>= 0.99 required; "
+                 f"served vectors stay fp32 unit vectors)"))
+    rows.append(("quant/parity-w8a8", 0.0,
+                 f"min cosine vs fp32 oracle: "
+                 f"cls={worst['int8_w8a8']['cls']:.5f} "
+                 f"mean={worst['int8_w8a8']['mean']:.5f} (>= 0.98 "
+                 f"required; served vectors stay fp32 unit vectors)"))
+
+    # --- full-mesh W8A8 composition (forced-8-device CI leg) -------------
+    # CI forces an 8-device host mesh (XLA_FLAGS); the W8A8 path must serve
+    # identically on the full data-sharded mesh as on the 1-device CPU tier
+    mesh_devs = len(jax.local_devices())
+    if mesh_devs >= 2:
+        mesh_be = ShardedEmbedderBackend(
+            cfg, params, max_tokens=MAX_TOKENS, dtype="int8_w8a8",
+            min_seq_bucket=MIN_SEQ_BUCKET, async_dispatch=True)
+        mq = _batches(1, 8, seed=11)[0]
+        one = np.stack(aa_be.embed_batch(mq))
+        full = np.stack(mesh_be.embed_batch(mq))
+        mesh_err = float(np.abs(one - full).max())
+        assert mesh_err <= 1e-5, \
+            f"W8A8 on the {mesh_be.device_count}-device mesh diverged " \
+            f"from the 1-device tier by {mesh_err:.2e}"
+        rows.append(("quant/w8a8-mesh-parity", 0.0,
+                     f"{mesh_be.device_count}-device W8A8 mesh matches the "
+                     f"1-device tier (max abs err {mesh_err:.1e})"))
+    else:
+        mesh_err = None
+        rows.append(("quant/w8a8-mesh-parity", 0.0,
+                     "skipped: single-device host (CI forces 8 via "
+                     "XLA_FLAGS)"))
 
     # --- resident-weight footprint ---------------------------------------
     shrink = f32_be.params_nbytes / i8_be.params_nbytes
     rows.append(("quant/resident-weights", 0.0,
                  f"fp32 {f32_be.params_nbytes/1e6:.1f}MB -> int8 "
                  f"{i8_be.params_nbytes/1e6:.1f}MB = {shrink:.1f}x smaller "
-                 f"(>= 2.5x required; embed table/norms/scales stay float)"))
+                 f"(>= 2.5x required; embed table/norms/scales stay float; "
+                 f"w8a8 resident bytes == int8: "
+                 f"{aa_be.params_nbytes == i8_be.params_nbytes})"))
 
     write_bench_json("quant_embed", rows, metrics={
-        "qps_int8": qps_i8, "qps_fp32": qps_f32, "throughput_ratio": ratio,
-        "throughput_bar": required, "gemm_probe_ratio": probe,
-        "batch_p95_s": p95, "cosine_cls": worst["cls"],
-        "cosine_mean": worst["mean"], "serving_retraces": retraces,
-        "weight_shrink": shrink,
+        "qps_int8": qps_i8, "qps_fp32": qps_f32, "qps_w8a8": qps_aa,
+        "throughput_ratio": ratio, "throughput_ratio_w8a8": ratio_aa,
+        "throughput_bar": required, "throughput_bar_w8a8": required_aa,
+        "gemm_probe_ratio": probe, "gemm_probe_w8a8": probe_aa,
+        "w8a8_slope_scale": slope_scale,
+        "batch_p95_s": p95, "batch_p95_w8a8_s": p95_aa,
+        "cosine_cls": worst["int8"]["cls"],
+        "cosine_mean": worst["int8"]["mean"],
+        "cosine_w8a8_cls": worst["int8_w8a8"]["cls"],
+        "cosine_w8a8_mean": worst["int8_w8a8"]["mean"],
+        "serving_retraces": retraces, "weight_shrink": shrink,
+        "w8a8_mesh_devices": mesh_devs,
+        "w8a8_mesh_max_abs_err": mesh_err,
     })
 
     # regression guards — benchmarks.run turns a raise into exit code 1
     assert ratio >= required, \
         f"int8 warm-serve throughput {ratio:.2f}x < {required:.2f}x bar " \
         f"(host GEMM probe {probe:.2f}x)"
+    assert ratio_aa >= required_aa, \
+        f"w8a8 warm-serve throughput {ratio_aa:.2f}x < {required_aa:.2f}x " \
+        f"bar (host GEMM probe {probe_aa:.2f}x)"
     assert retraces == 0, \
         f"steady-state serving retraced {retraces}x after prewarm"
-    assert sorted(i8_be.warm_buckets) == sorted(f32_be.warm_buckets), \
-        "int8 stream executed different bucket shapes than fp32"
-    for pool, cos in worst.items():
+    assert buckets_equal, \
+        "quantized streams executed different bucket shapes than fp32"
+    for pool, cos in worst["int8"].items():
         assert cos >= 0.99, \
             f"int8 embeddings diverged from fp32 oracle ({pool}): {cos:.5f}"
+    for pool, cos in worst["int8_w8a8"].items():
+        assert cos >= 0.98, \
+            f"w8a8 embeddings diverged from fp32 oracle ({pool}): {cos:.5f}"
     assert shrink >= 2.5, \
         f"resident weights shrank only {shrink:.2f}x (>= 2.5x required)"
+    assert aa_be.params_nbytes == i8_be.params_nbytes, \
+        "w8a8 must reuse the int8 resident tree, not carry a second copy"
     return rows
 
 

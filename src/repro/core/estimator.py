@@ -62,6 +62,26 @@ def fit_latency(concurrency: Sequence[float], latency_s: Sequence[float],
     return LatencyFit(float(alpha), float(beta), 1.0 - ss_res / ss_tot)
 
 
+def quantized_fit(fit: LatencyFit, slope_scale: float) -> LatencyFit:
+    """Re-price an Eq. 12 fit for a quantized serving path.
+
+    Quantization (weight-only int8, or the W8A8 int8 x int8 trunk) shrinks
+    the per-query service slope ``beta_s`` (our ``alpha``) by the measured
+    GEMM-level speedup while the fixed dispatch/load cost ``beta`` stays —
+    exactly the transform the paper's deployment-cost argument cares about,
+    since depth is ``(SLO - beta) / alpha``.  ``slope_scale`` is the
+    measured quantized/fp32 service-time ratio (< 1 when quantization
+    helps; the ``w8a8_slope_scale`` metric in ``BENCH_quant_embed.json`` is
+    the live source).  A scaled fit lets ``estimate_depth_per_bucket`` /
+    ``PredictivePolicy`` price the quantized tier without a second full
+    profiling sweep; ``r2`` is inherited (the residuals scale with the
+    curve).
+    """
+    if slope_scale <= 0:
+        raise ValueError(f"slope_scale must be positive, got {slope_scale}")
+    return LatencyFit(fit.alpha * slope_scale, fit.beta, fit.r2)
+
+
 def fanout_probe_points(devices: int,
                         base: Sequence[int] = (1, 4, 16, 64),
                         ) -> Tuple[int, ...]:

@@ -81,10 +81,12 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
     default-constructed backend is the paper-faithful fp32 synchronous
     baseline and every optimization is a reproducible baseline-vs-change
     row.  ``dtype`` policies (``repro.models.quantize.serve_params``):
-    ``fp32`` oracle, ``bf16`` resident weights, or ``int8`` weight-only
+    ``fp32`` oracle, ``bf16`` resident weights, ``int8`` weight-only
     quantized projections (int8 weights + fp32 dequant scales, fp32
     activations, the fused quant matmul in the trunk; served vectors stay
-    fp32 unit vectors within 1e-2 cosine of the oracle).  Counters are
+    fp32 unit vectors within 1e-2 cosine of the oracle), or ``int8_w8a8``
+    (the same tree with dynamic per-row activation quantization — int8 x
+    int8 projections, int32 accumulation, within 2e-2 cosine).  Counters are
     inherited from the bucketed backend (``traces``, ``bucket_hits``,
     ``real_tokens``/``padded_tokens``, ``truncated``).
     """
@@ -103,7 +105,7 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
         from repro import perf_flags
         from repro.launch.mesh import make_serve_mesh
         from repro.models import embedder
-        from repro.models.quantize import serve_params
+        from repro.models.quantize import serve_params, wants_act_quant
         from repro.parallel.sharding import dp_axes, serve_embed_shardings
 
         flags = perf_flags.FLAGS
@@ -138,8 +140,11 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
                          telemetry=telemetry)
         self.dtype = dtype
         # the trunk's ACTIVATION dtype: weight-only int8 keeps fp32
-        # activations, so quantization error enters via the weights alone
+        # activations, so quantization error enters via the weights alone;
+        # int8_w8a8 additionally quantizes activations per projection
         self.serve_dtype = cdt
+        aq = wants_act_quant(dtype)
+        self.act_quant = aq
         self.name = (f"jax-sharded/{cfg.name}@{ndev}dev/{dtype}"
                      + ("+donate" if donate else "")
                      + ("+async" if self.async_dispatch else ""))
@@ -153,7 +158,8 @@ class ShardedEmbedderBackend(BucketedEmbedderBackend):
 
         def _fn(p, toks, mask):
             self.traces += 1          # python side effect: runs once per trace
-            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt)
+            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt,
+                                  act_quant=aq)
 
         # (b) donate the per-batch token/mask device buffers; on a backend
         # where donation is unimplemented (this CPU container) the

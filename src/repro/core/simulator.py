@@ -230,6 +230,21 @@ def cpu_core_scaled(dev: DeviceModel, cores: int, full_cores: int = 44
                        dev.a * scale, dev.noise_std, dev.ref_length)
 
 
+def quantized_model(dev: DeviceModel, slope_scale: float,
+                    tag: str = "w8a8") -> DeviceModel:
+    """DES mirror of a quantized serving policy on ``dev``: the measured
+    quantized/fp32 service-time ratio scales the concurrency-dependent
+    terms (b, a — the per-query slope the estimator fits as ``beta_s``)
+    while the fixed dispatch cost ``beta`` stays.  ``slope_scale < 1``
+    (quantization helps) therefore raises the Eq. 11 depth
+    ``(SLO - beta)/alpha`` — the DES and ``estimator.quantized_fit`` agree
+    on how the quantized tier is priced."""
+    if slope_scale <= 0:
+        raise ValueError(f"slope_scale must be positive, got {slope_scale}")
+    return DeviceModel(f"{dev.name}+{tag}", dev.beta, dev.b * slope_scale,
+                       dev.a * slope_scale, dev.noise_std, dev.ref_length)
+
+
 # ---------------------------------------------------------------------------
 # discrete-event simulation
 # ---------------------------------------------------------------------------

@@ -107,10 +107,13 @@ class JaxEmbedderBackend(Backend):
     ``dtype`` (optional) selects a serving precision policy realised ONCE
     at load by ``repro.models.quantize.serve_params``: ``"fp32"`` (fp32
     weights + fp32 trunk — the precision oracle), ``"bf16"`` (bf16-resident
-    weights, bf16 trunk), or ``"int8"`` (int8 weight-only quantized
+    weights, bf16 trunk), ``"int8"`` (int8 weight-only quantized
     projections + fp32 scales, fp32 activations, routed through the fused
-    quant matmul by ``models.layers.dense_apply``).  None keeps the legacy
-    behaviour: raw params with the model's default compute dtype.
+    quant matmul by ``models.layers.dense_apply``), or ``"int8_w8a8"``
+    (same quantized tree plus dynamic per-row int8 activation quantization:
+    every projection contracts int8 x int8 with int32 accumulation).  None
+    keeps the legacy behaviour: raw params with the model's default compute
+    dtype.
     """
 
     def __init__(self, cfg, params, max_tokens: int = 128,
@@ -134,13 +137,17 @@ class JaxEmbedderBackend(Backend):
         if dtype is None:
             self.params = params
             cdt = None           # model default (layers.COMPUTE_DTYPE)
+            aq = False
         else:
-            from repro.models.quantize import serve_params
+            from repro.models.quantize import serve_params, wants_act_quant
             self.params, cdt = serve_params(params, dtype)
+            aq = wants_act_quant(dtype)
+        self.act_quant = aq
 
         def _fn(p, toks, mask):
             self.traces += 1          # python side effect: runs once per trace
-            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt)
+            return embedder.embed(p, cfg, toks, mask, compute_dtype=cdt,
+                                  act_quant=aq)
 
         self._embed = jax.jit(_fn)
         self._jnp = jnp

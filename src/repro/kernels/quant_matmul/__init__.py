@@ -1,4 +1,10 @@
 from repro.kernels.quant_matmul.ops import (quant_matmul, quant_matmul_pallas,
-                                            quant_matmul_ref)
+                                            quant_matmul_ref,
+                                            quant_matmul_w8a8,
+                                            quantize_activations,
+                                            w8a8_matmul_pallas,
+                                            w8a8_matmul_ref)
 
-__all__ = ["quant_matmul", "quant_matmul_pallas", "quant_matmul_ref"]
+__all__ = ["quant_matmul", "quant_matmul_pallas", "quant_matmul_ref",
+           "quant_matmul_w8a8", "w8a8_matmul_pallas", "w8a8_matmul_ref",
+           "quantize_activations"]

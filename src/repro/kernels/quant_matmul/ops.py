@@ -1,12 +1,45 @@
-"""Backend-dispatching jit wrapper for the fused int8 quant matmul."""
+"""Backend-dispatching jit wrappers for the fused int8 quant matmuls.
+
+``_quant_matmul`` / ``_quant_matmul_w8a8`` are the unjitted impls (exposed
+so dispatch tests can record which route fires without fighting jit
+caches); ``quant_matmul`` / ``quant_matmul_w8a8`` are the jitted entries
+every serving call site uses.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
-from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.quant_matmul import quant_matmul as _kmod
+from repro.kernels.quant_matmul import ref as _rmod
+from repro.kernels.quant_matmul.quant_matmul import (quantize_activations,
+                                                    quant_matmul_pallas,
+                                                    w8a8_matmul_pallas)
+from repro.kernels.quant_matmul.ref import quant_matmul_ref, w8a8_matmul_ref
+
+
+def _resolve_backend(backend: str) -> str:
+    """``auto`` routes to the Pallas kernel exactly when running on a TPU
+    backend (where int8 VMEM tiles pay off); everywhere else the jnp oracle
+    is the same contract, lowered through XLA."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def _quant_matmul(x, w8, scale, *, backend: str = "auto", block_m: int = 128,
+                  block_n: int = 128, block_k: int = 128):
+    backend = _resolve_backend(backend)
+    if backend == "pallas":
+        return _kmod.quant_matmul_pallas(x, w8, scale, block_m=block_m,
+                                         block_n=block_n, block_k=block_k,
+                                         interpret=False)
+    if backend == "interpret":
+        return _kmod.quant_matmul_pallas(x, w8, scale, block_m=block_m,
+                                         block_n=block_n, block_k=block_k,
+                                         interpret=True)
+    return _rmod.quant_matmul_ref(x, w8, scale)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "block_m", "block_n",
@@ -15,22 +48,49 @@ def quant_matmul(x, w8, scale, *, backend: str = "auto", block_m: int = 128,
                  block_n: int = 128, block_k: int = 128):
     """x: (..., K) float; w8: (K, N) int8; scale: (N,) fp32 -> (..., N).
 
-    ``auto`` routes to the Pallas kernel exactly when running on a TPU
-    backend (where int8 VMEM tiles pay off); everywhere else the jnp
-    oracle is the same contract — fp32 accumulation, dequant-by-scale
-    epilogue — lowered through XLA.
+    Weight-only route: float activations, fp32 accumulation, dequant-by-
+    weight-scale epilogue (W8A16/W8A32 depending on the activation dtype).
     """
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return _quant_matmul(x, w8, scale, backend=backend, block_m=block_m,
+                         block_n=block_n, block_k=block_k)
+
+
+def _quant_matmul_w8a8(x, w8, w_scale, *, backend: str = "auto",
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128):
+    x8, x_scale = quantize_activations(x)
+    backend = _resolve_backend(backend)
     if backend == "pallas":
-        return quant_matmul_pallas(x, w8, scale, block_m=block_m,
-                                   block_n=block_n, block_k=block_k,
-                                   interpret=False)
+        return _kmod.w8a8_matmul_pallas(x8, w8, x_scale, w_scale,
+                                        block_m=block_m, block_n=block_n,
+                                        block_k=block_k, out_dtype=x.dtype,
+                                        interpret=False)
     if backend == "interpret":
-        return quant_matmul_pallas(x, w8, scale, block_m=block_m,
-                                   block_n=block_n, block_k=block_k,
-                                   interpret=True)
-    return quant_matmul_ref(x, w8, scale)
+        return _kmod.w8a8_matmul_pallas(x8, w8, x_scale, w_scale,
+                                        block_m=block_m, block_n=block_n,
+                                        block_k=block_k, out_dtype=x.dtype,
+                                        interpret=True)
+    return _rmod.w8a8_matmul_ref(x8, w8, x_scale, w_scale, out_dtype=x.dtype)
 
 
-__all__ = ["quant_matmul", "quant_matmul_pallas", "quant_matmul_ref"]
+@functools.partial(jax.jit, static_argnames=("backend", "block_m", "block_n",
+                                             "block_k"))
+def quant_matmul_w8a8(x, w8, w_scale, *, backend: str = "auto",
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128):
+    """x: (..., K) float; w8: (K, N) int8; w_scale: (N,) fp32 -> (..., N).
+
+    W8A8 route: quantizes the activations on the fly (per-row dynamic
+    symmetric absmax — fused into the same jit so the int8 activations are
+    produced right where the kernel consumes them), contracts int8 x int8
+    with int32 accumulation, and dequantizes once in the epilogue by
+    ``act_scale[:, None] * w_scale[None, :]``.
+    """
+    return _quant_matmul_w8a8(x, w8, w_scale, backend=backend,
+                              block_m=block_m, block_n=block_n,
+                              block_k=block_k)
+
+
+__all__ = ["quant_matmul", "quant_matmul_w8a8", "quant_matmul_pallas",
+           "w8a8_matmul_pallas", "quant_matmul_ref", "w8a8_matmul_ref",
+           "quantize_activations"]

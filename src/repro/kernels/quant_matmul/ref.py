@@ -1,12 +1,17 @@
-"""Pure-jnp oracle for the fused int8 weight-only quant matmul.
+"""Pure-jnp oracles for the fused int8 quant matmuls.
 
-The contract every backend route must honour: int8 weights x float
-activations, fp32 MXU accumulation, and the per-output-channel dequant
-scale applied ONCE in the epilogue (weight-only symmetric quantization has
-no zero point, so ``x @ (w8 * s) == (x @ w8) * s`` exactly in real
-arithmetic — applying the scale after the contraction is what makes the
-kernel "fused": the dequantized fp32/bf16 weight matrix is never
-materialised).
+The contract every backend route must honour — weight-only
+(``quant_matmul_ref``): int8 weights x float activations, fp32 MXU
+accumulation, and the per-output-channel dequant scale applied ONCE in the
+epilogue (weight-only symmetric quantization has no zero point, so
+``x @ (w8 * s) == (x @ w8) * s`` exactly in real arithmetic — applying the
+scale after the contraction is what makes the kernel "fused": the
+dequantized fp32/bf16 weight matrix is never materialised).
+
+W8A8 (``w8a8_matmul_ref``): int8 activations x int8 weights with **int32**
+accumulation (exact — 2^31 comfortably covers K * 127^2 for any K the trunk
+contracts), dequantized once by the outer product of the per-row activation
+scale and the per-output-channel weight scale.
 """
 from __future__ import annotations
 
@@ -30,3 +35,25 @@ def quant_matmul_ref(x: jax.Array, w8: jax.Array,
                           (((x.ndim - 1,), (0,)), ((), ())),
                           preferred_element_type=jnp.float32)
     return (acc * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def w8a8_matmul_ref(x8: jax.Array, w8: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """x8: (..., K) int8; w8: (K, N) int8; x_scale: x8.shape[:-1] fp32;
+    w_scale: (N,) fp32 -> (..., N) in ``out_dtype``.
+
+    Both operands enter the contraction as int8 and accumulate int32
+    (``preferred_element_type=jnp.int32``), matching the Pallas kernel's
+    exact integer arithmetic; dequant is the single epilogue multiply
+    ``acc * x_scale[..., None] * w_scale``.
+    """
+    if x8.dtype != jnp.int8:
+        raise TypeError(f"quantized activations must be int8, got {x8.dtype}")
+    if w8.dtype != jnp.int8:
+        raise TypeError(f"quantized weights must be int8, got {w8.dtype}")
+    acc = lax.dot_general(x8, w8, (((x8.ndim - 1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    out = (acc.astype(jnp.float32)
+           * x_scale[..., None].astype(jnp.float32)
+           * w_scale.astype(jnp.float32))
+    return out.astype(out_dtype)

@@ -14,10 +14,15 @@ path), and the §Perf serving flags select the optimized rows::
 
 ``embed_dtype=int8`` serves the weight-only quantized trunk (int8
 projections + fp32 dequant scales via the fused quant matmul, 4x smaller
-resident weights, >= 0.99 cosine vs the fp32 oracle); with
-``--policy length-aware`` the dispatch threshold is calibrated from one
-Eq. 12 fit PER seq-length bucket, so it tracks the bucketed (and
-quantized) CPU service curve instead of a hand-picked constant.
+resident weights, >= 0.99 cosine vs the fp32 oracle); ``int8_w8a8`` also
+quantizes the activations per batch (int8 x int8 projections with int32
+accumulation, >= 0.98 cosine) — the raw-speed policy wherever the backend
+has a native int8 GEMM.  With ``--policy length-aware`` the dispatch
+threshold is calibrated from one Eq. 12 fit PER seq-length bucket, so it
+tracks the bucketed (and quantized) CPU service curve instead of a
+hand-picked constant: a quantized policy's smaller per-query slope
+(``beta_s``) shows up in those fits directly and raises the calibrated
+offload depth (see ``estimator.quantized_fit``).
 """
 from __future__ import annotations
 
@@ -182,8 +187,8 @@ def main() -> None:
     ap.add_argument("--policy", default="cascade", choices=sorted(POLICIES),
                     help="dispatch policy (cascade == paper Algorithm 1)")
     ap.add_argument("--opt", default="",
-                    help="perf flags, e.g. embed_dtype=int8,embed_async=1 "
-                         "(embed_dtype: fp32|bf16|int8)")
+                    help="perf flags, e.g. embed_dtype=int8_w8a8,embed_async=1 "
+                         "(embed_dtype: fp32|bf16|int8|int8_w8a8)")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
     ap.add_argument("--npu-devices", type=int, default=1,

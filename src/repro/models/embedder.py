@@ -42,7 +42,7 @@ def init_embedder(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
           mask: jax.Array | None = None, *,
-          compute_dtype: Any = None) -> jax.Array:
+          compute_dtype: Any = None, act_quant: bool = False) -> jax.Array:
     """tokens: (B, S) int32; mask: (B, S) 1=real token.  Returns (B, embed_dim)
     L2-normalised embeddings (the paper's 1024-d fp32 output vector).
 
@@ -60,7 +60,10 @@ def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
     to the activation dtype at use, see ``models.layers``): the serving
     backends pass ``jnp.float32`` for the precision oracle and
     ``jnp.bfloat16`` for bf16-resident serving; None keeps the global
-    ``layers.COMPUTE_DTYPE`` default.
+    ``layers.COMPUTE_DTYPE`` default.  ``act_quant`` turns on W8A8
+    projections (dynamic per-row int8 activation quantization against an
+    int8-quantized param tree — see ``models.layers.dense_apply``); it is a
+    no-op on float trees, and the pool epilogue stays fp32 regardless.
     """
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -72,9 +75,9 @@ def embed(params: Params, cfg: ModelConfig, tokens: jax.Array,
     def body(h, bp):
         hin = L.apply_norm(bp["norm1"], cfg, h)
         h = h + L.attn_forward(bp["attn"], cfg, hin, positions, causal=False,
-                               kv_mask=kv_mask)
+                               kv_mask=kv_mask, act_quant=act_quant)
         hin = L.apply_norm(bp["norm2"], cfg, h)
-        h = h + L.apply_mlp(bp["ffn"], cfg, hin)
+        h = h + L.apply_mlp(bp["ffn"], cfg, hin, act_quant=act_quant)
         return h, None
 
     h, _ = lax.scan(body, h, params["blocks"])

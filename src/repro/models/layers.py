@@ -43,17 +43,32 @@ def _dense_init(key, shape, dtype, scale: Optional[float] = None):
 # dense apply — the one place a projection weight meets its activations
 # ----------------------------------------------------------------------------
 
-def dense_apply(p: Params, name: str, x: jax.Array) -> jax.Array:
+def dense_apply(p: Params, name: str, x: jax.Array,
+                act_quant: bool = False) -> jax.Array:
     """``x @ p[name]`` with the weight cast to the activation dtype — unless
     the param tree carries a ``{name}_scale`` dequant sibling (see
     ``repro.models.quantize``), in which case the projection routes through
-    the fused int8 quant matmul (int8 weights x float activations, fp32
-    accumulation, scale applied once in the epilogue).  Routing is purely
-    param-driven so quantized and float trees share every caller and every
-    jit cache key shape."""
+    the fused int8 quant matmul.  Routing is purely param/flag-driven so
+    quantized and float trees share every caller and every jit cache key
+    shape:
+
+    - float tree (no scale sibling)    -> plain matmul
+    - quantized tree, ``act_quant`` off -> weight-only W8A16/W8A32 (int8
+      weights x float activations, fp32 accumulation, weight scale applied
+      once in the epilogue)
+    - quantized tree, ``act_quant`` on  -> W8A8: activations dynamically
+      quantized per row (symmetric absmax), int8 x int8 with int32
+      accumulation, dequant once by ``act_scale x w_scale`` in the epilogue
+
+    ``act_quant`` on a float tree is a no-op by construction (there is no
+    int8 weight to contract against), so callers may thread the flag
+    unconditionally."""
     scale = p.get(name + "_scale")
     if scale is None:
         return x @ p[name].astype(x.dtype)
+    if act_quant:
+        from repro.kernels.quant_matmul.ops import quant_matmul_w8a8
+        return quant_matmul_w8a8(x, p[name], scale)
     from repro.kernels.quant_matmul.ops import quant_matmul
     return quant_matmul(x, p[name], scale)
 
@@ -127,12 +142,12 @@ def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
     return p
 
 
-def _project_qkv(p: Params, cfg: ModelConfig, x, kv_x):
+def _project_qkv(p: Params, cfg: ModelConfig, x, kv_x, act_quant: bool = False):
     hd = cfg.resolved_head_dim
     H, KV = cfg.num_heads, cfg.num_kv_heads
-    q = dense_apply(p, "wq", x)
-    k = dense_apply(p, "wk", kv_x)
-    v = dense_apply(p, "wv", kv_x)
+    q = dense_apply(p, "wq", x, act_quant=act_quant)
+    k = dense_apply(p, "wk", kv_x, act_quant=act_quant)
+    v = dense_apply(p, "wv", kv_x, act_quant=act_quant)
     if "bq" in p:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -277,6 +292,7 @@ def attn_forward(
     kv_positions: Optional[jax.Array] = None,
     return_kv: bool = False,
     kv_mask: Optional[jax.Array] = None,  # (B, Skv) 1 = real key token
+    act_quant: bool = False,              # W8A8 projections (quantized trees)
 ):
     """Full-sequence attention for train / prefill / encoder / cross.
 
@@ -290,7 +306,7 @@ def attn_forward(
     """
     kv_src = x if kv_x is None else kv_x
     kv_pos = positions if kv_positions is None else kv_positions
-    q, k, v = _project_qkv(p, cfg, x, kv_src)
+    q, k, v = _project_qkv(p, cfg, x, kv_src, act_quant=act_quant)
     if cfg.rope_theta:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, kv_pos, cfg.rope_theta)
@@ -315,7 +331,8 @@ def attn_forward(
         out = flash_attention_jnp(
             q, k, v, positions, kv_pos, causal=causal,
             window=cfg.sliding_window if causal else 0, kv_mask=kv_mask)
-    y = dense_apply(p, "wo", out.reshape(*x.shape[:-1], -1))
+    y = dense_apply(p, "wo", out.reshape(*x.shape[:-1], -1),
+                    act_quant=act_quant)
     if return_kv:
         return y, k, v
     return y
@@ -534,13 +551,14 @@ def init_mlp(key, cfg: ModelConfig, dtype) -> Params:
     }
 
 
-def apply_mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def apply_mlp(p: Params, cfg: ModelConfig, x: jax.Array,
+              act_quant: bool = False) -> jax.Array:
     if cfg.act == "silu":
-        g = jax.nn.silu(dense_apply(p, "w_gate", x))
-        u = dense_apply(p, "w_up", x)
-        return dense_apply(p, "w_down", g * u)
-    h = jax.nn.gelu(dense_apply(p, "w_in", x))
-    return dense_apply(p, "w_out", h)
+        g = jax.nn.silu(dense_apply(p, "w_gate", x, act_quant=act_quant))
+        u = dense_apply(p, "w_up", x, act_quant=act_quant)
+        return dense_apply(p, "w_down", g * u, act_quant=act_quant)
+    h = jax.nn.gelu(dense_apply(p, "w_in", x, act_quant=act_quant))
+    return dense_apply(p, "w_out", h, act_quant=act_quant)
 
 
 # ----------------------------------------------------------------------------

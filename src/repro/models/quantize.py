@@ -24,7 +24,11 @@ float param tree into an int8-weight serving tree ONCE at load:
   extra leading dim beyond the layer stack).
 
 ``serve_params`` is the single load-time entry every serving backend uses
-to realise an ``embed_dtype`` policy (fp32 | bf16 | int8).
+to realise an ``embed_dtype`` policy (fp32 | bf16 | int8 | int8_w8a8).
+``int8_w8a8`` serves the SAME quantized tree as ``int8`` — the extra step
+(dynamic per-row activation quantization into the int8 x int8 kernel) is a
+trace-time choice, signalled by ``wants_act_quant`` and threaded into
+``models.embedder.embed(act_quant=...)`` by the backends.
 """
 from __future__ import annotations
 
@@ -45,7 +49,16 @@ DENSE_KEYS = frozenset({"wq", "wk", "wv", "wo",
                         "w_in", "w_out", "w_gate", "w_up", "w_down"})
 
 # embed_dtype perf-flag values every serving backend accepts
-EMBED_DTYPES = ("fp32", "bf16", "int8")
+EMBED_DTYPES = ("fp32", "bf16", "int8", "int8_w8a8")
+
+# policies that additionally quantize activations at every projection
+ACT_QUANT_DTYPES = frozenset({"int8_w8a8"})
+
+
+def wants_act_quant(dtype: str | None) -> bool:
+    """True when the policy quantizes activations too (W8A8), i.e. the
+    backends must thread ``act_quant=True`` into the embed trace."""
+    return dtype in ACT_QUANT_DTYPES
 
 SCALE_SUFFIX = "_scale"
 
@@ -123,7 +136,12 @@ def serve_params(params: Params, dtype: str) -> Tuple[Params, Any]:
       (weights int8 + fp32 scales), everything else fp32, fp32
       activations — the weight-only policy: quantization error enters
       through the weights alone, and the ``pool_norm`` epilogue keeps
-      served vectors fp32 unit vectors for every policy.
+      served vectors fp32 unit vectors for every policy;
+    * ``int8_w8a8`` — the same quantized tree, but the backends also turn
+      on dynamic per-row int8 activation quantization
+      (``wants_act_quant``), so every projection contracts int8 x int8
+      with int32 accumulation.  Non-projection compute (norms, softmax,
+      pooling) stays fp32.
     """
     if dtype not in EMBED_DTYPES:
         raise ValueError(f"embed dtype must be one of {'|'.join(EMBED_DTYPES)}"
@@ -132,6 +150,6 @@ def serve_params(params: Params, dtype: str) -> Tuple[Params, Any]:
         return (jax.tree.map(lambda x: x.astype(jnp.bfloat16)
                              if jnp.issubdtype(x.dtype, jnp.floating) else x,
                              params), jnp.bfloat16)
-    if dtype == "int8":
+    if dtype in ("int8", "int8_w8a8"):
         return quantize_params(params), jnp.float32
     return params, jnp.float32

@@ -65,12 +65,16 @@ class PerfFlags:
     remat_policy: str = "full"
     # embedding serving precision: "fp32" (baseline oracle: fp32-resident
     # weights, fp32 trunk), "bf16" (weights cast ONCE at load, all matmuls
-    # bf16), or "int8" (weight-only per-output-channel symmetric int8
+    # bf16), "int8" (weight-only per-output-channel symmetric int8
     # quantization of every dense/attention projection at load, fp32 scales,
     # fp32 activations, the fused quant-matmul kernel in the trunk — 4x
-    # smaller resident weights).  The pool_norm epilogue always accumulates
-    # fp32 so served vectors stay fp32 unit vectors within 1e-2 cosine
-    # (>= 0.99) of the oracle for every policy.
+    # smaller resident weights), or "int8_w8a8" (the int8 tree plus dynamic
+    # per-row symmetric int8 activation quantization: every projection
+    # contracts int8 x int8 with int32 accumulation, dequantized once in the
+    # kernel epilogue — the MXU int8-rate path).  The pool_norm epilogue
+    # always accumulates fp32 so served vectors stay fp32 unit vectors
+    # within 1e-2 cosine (>= 0.99) of the oracle for the weight-only
+    # policies and 2e-2 (>= 0.98) for int8_w8a8.
     embed_dtype: str = "fp32"
     # embedding serving: donate the token/mask device buffers to the jit'd
     # embed (jit donate_argnums) so XLA reuses them instead of allocating
@@ -113,4 +117,12 @@ def parse_opt(spec: str) -> dict:
             out[k] = v.strip()
         else:
             out[k] = v.strip() in ("1", "true", "True", "yes")
+        if k == "embed_dtype":
+            # validate the VALUE here too: a typo'd policy must fail at the
+            # CLI, not at first backend construction minutes into a run
+            from repro.models.quantize import EMBED_DTYPES
+            if out[k] not in EMBED_DTYPES:
+                raise ValueError(
+                    f"unknown embed_dtype {out[k]!r}; valid values: "
+                    f"{'|'.join(EMBED_DTYPES)}")
     return out

@@ -108,3 +108,16 @@ class TestReducedPrecisionBars:
         got = serve(be, queries)
         assert got.dtype == np.float32
         assert max_cosine_distance(got, want) <= 0.01   # >= 0.99 cosine
+
+    def test_w8a8_within_documented_cosine_bar(self, golden):
+        """W8A8 (int8 weights AND dynamically quantized activations) serves
+        within its documented >= 0.98 cosine bar against the pinned fp32
+        golden vectors, still as fp32 unit vectors."""
+        cfg, params, queries, want = golden
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    min_seq_bucket=8, dtype="int8_w8a8")
+        got = serve(be, queries)
+        assert got.dtype == np.float32
+        np.testing.assert_allclose(np.linalg.norm(got, axis=-1), 1.0,
+                                   atol=1e-3)
+        assert max_cosine_distance(got, want) <= 0.02   # >= 0.98 cosine

@@ -8,7 +8,9 @@ from repro.kernels.flash_attention import (attention_ref, flash_attention,
                                            flash_attention_pallas)
 from repro.kernels.pool_norm import pool_norm, pool_norm_pallas, pool_norm_ref
 from repro.kernels.quant_matmul import (quant_matmul, quant_matmul_pallas,
-                                        quant_matmul_ref)
+                                        quant_matmul_ref, quant_matmul_w8a8,
+                                        quantize_activations,
+                                        w8a8_matmul_pallas, w8a8_matmul_ref)
 from repro.kernels.rmsnorm import rmsnorm_pallas, rmsnorm_ref
 from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
 
@@ -329,6 +331,208 @@ def test_quant_matmul_matches_dense_apply_contract():
     bound = (np.abs(np.asarray(x)).sum(-1, keepdims=True)
              * np.asarray(s)[None, :] * 0.5 + 1e-5)
     assert (np.abs(got - want) <= bound).all()
+
+
+# ---------------------------------------------------------------- w8a8 -----
+W8A8_CASES = [
+    # M, K, N, block_m, block_n, block_k
+    (128, 128, 128, 128, 128, 128),   # exactly one block
+    (200, 96, 260, 128, 128, 64),     # every dim ragged vs its block
+    (7, 48, 130, 8, 128, 32),         # small M, K split across steps
+    (256, 320, 64, 64, 64, 128),      # multi-block M and K
+    (1, 16, 24, 128, 128, 128),       # single row, tiny dims
+    (33, 512, 48, 16, 32, 128),       # deep K: int16 accumulation would clip
+]
+
+
+def _np_w8a8_oracle(x8, w8, xs, ws):
+    """Exact numpy int32-accumulation oracle (int64 overflow check)."""
+    acc64 = np.asarray(x8, np.int64) @ np.asarray(w8, np.int64)
+    assert np.abs(acc64).max() < 2 ** 31, "oracle itself would overflow"
+    acc = acc64.astype(np.int32)
+    return (acc.astype(np.float32) * np.asarray(xs, np.float32)[:, None]
+            * np.asarray(ws, np.float32)[None, :])
+
+
+@pytest.mark.parametrize("case", W8A8_CASES)
+def test_w8a8_matmul_vs_int32_oracle(case):
+    """Pallas (interpret) and jnp W8A8 routes == the exact numpy int32
+    oracle across block raggedness.  The contraction is integer, so the
+    match is exact up to the final fp32 dequant rounding."""
+    M, K, N, bm, bn, bk = case
+    ks = jax.random.split(KEY, 4)
+    x8 = jax.random.randint(ks[0], (M, K), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    w8 = jax.random.randint(ks[1], (K, N), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    xs = jnp.abs(jax.random.normal(ks[2], (M,))) * 0.02 + 1e-4
+    ws = jnp.abs(jax.random.normal(ks[3], (N,))) * 0.01 + 1e-4
+    want = _np_w8a8_oracle(x8, w8, xs, ws)
+    got_p = w8a8_matmul_pallas(x8, w8, xs, ws, block_m=bm, block_n=bn,
+                               block_k=bk, interpret=True)
+    got_r = w8a8_matmul_ref(x8, w8, xs, ws)
+    assert got_p.dtype == got_r.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got_p), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_r), want, rtol=1e-6)
+
+
+def test_w8a8_accumulates_in_int32_not_float():
+    """Constructed so a float32 running accumulator would round: all-positive
+    int8 operands drive the partial sums past 2^24 (fp32 integer-exactness
+    limit) with odd per-tile increments, while the exact int32 sum converted
+    ONCE to fp32 is what both routes must return bit-exactly."""
+    rng = np.random.default_rng(0)
+    M, K, N = 2, 6144, 8
+    x8 = jnp.asarray(rng.integers(1, 128, (M, K)).astype(np.int8))
+    w8 = jnp.asarray(rng.integers(1, 128, (K, N)).astype(np.int8))
+    ones_m, ones_n = jnp.ones((M,)), jnp.ones((N,))
+    acc64 = np.asarray(x8, np.int64) @ np.asarray(w8, np.int64)
+    assert acc64.max() > 2 ** 24, "case must exceed fp32 exact-int range"
+    assert acc64.max() < 2 ** 31
+    want = acc64.astype(np.int32).astype(np.float32)   # single final rounding
+    got_p = w8a8_matmul_pallas(x8, w8, ones_m, ones_n, block_m=8,
+                               block_n=8, block_k=64, interpret=True)
+    got_r = w8a8_matmul_ref(x8, w8, ones_m, ones_n)
+    np.testing.assert_array_equal(np.asarray(got_p), want)
+    np.testing.assert_array_equal(np.asarray(got_r), want)
+
+
+def test_quantize_activations_extreme_ranges():
+    """absmax≈0 rows must not NaN (guarded scale divide), subnormal rows
+    must not overflow the int8 clip, huge rows stay finite."""
+    K = 64
+    x = jnp.stack([
+        jnp.zeros((K,)),                                  # exactly zero
+        jnp.full((K,), 1e-42),                            # subnormal absmax
+        jnp.full((K,), 1e30),                             # huge
+        jnp.linspace(-3.0, 3.0, K),                       # ordinary
+        jnp.zeros((K,)).at[0].set(1e-45),                 # one denormal elt
+    ])
+    x8, scale = quantize_activations(x)
+    assert x8.dtype == jnp.int8 and scale.dtype == jnp.float32
+    assert bool(jnp.isfinite(scale).all())
+    assert bool((scale > 0).all())
+    assert int(jnp.abs(x8).max()) <= 127
+    assert int(jnp.abs(x8[0]).max()) == 0                 # zero row -> zeros
+    # dequant round-trips ordinary rows within scale/2 per element
+    err = jnp.abs(x8[3].astype(jnp.float32) * scale[3] - x[3])
+    assert float(err.max()) <= float(scale[3]) * 0.5 + 1e-7
+    # end-to-end: extreme rows stay finite through the kernel
+    w8 = jax.random.randint(KEY, (K, 16), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    ws = jnp.full((16,), 0.01)
+    out = quant_matmul_w8a8(x, w8, ws)
+    assert bool(jnp.isfinite(out).all())
+    assert bool((out[0] == 0).all())
+
+
+def test_w8a8_matmul_leading_batch_dims():
+    x = jax.random.normal(KEY, (2, 9, 48))
+    w8 = jax.random.randint(KEY, (48, 64), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    s = jnp.full((64,), 0.02)
+    out = quant_matmul_w8a8(x, w8, s)
+    assert out.shape == (2, 9, 64) and out.dtype == x.dtype
+    x8, xs = quantize_activations(x)
+    # fp32 dequant-epilogue fusion order may differ under jit: atol covers
+    # the last-ulp wobble, the integer contraction itself is exact
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(w8a8_matmul_ref(x8, w8, xs, s)),
+        atol=1e-4)
+
+
+def test_w8a8_rejects_unquantized_operands():
+    x8 = jnp.zeros((4, 32), jnp.int8)
+    xf = jnp.zeros((4, 32), jnp.float32)
+    w8 = jnp.zeros((32, 16), jnp.int8)
+    s = jnp.ones((16,))
+    xs = jnp.ones((4,))
+    with pytest.raises(TypeError, match="int8"):
+        w8a8_matmul_ref(xf, w8, xs, s)
+    with pytest.raises(TypeError, match="int8"):
+        w8a8_matmul_pallas(x8, xf.T, xs, s, interpret=True)
+    with pytest.raises(TypeError, match="int8"):
+        w8a8_matmul_pallas(xf, w8, xs, s, interpret=True)
+
+
+def test_w8a8_block_size_invariance():
+    """Integer accumulation makes the K-split bitwise irrelevant (unlike
+    the fp32-accumulating weight-only kernel, which only matches to
+    rounding): any block tiling returns the identical result."""
+    ks = jax.random.split(KEY, 2)
+    x8 = jax.random.randint(ks[0], (96, 160), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    w8 = jax.random.randint(ks[1], (160, 192), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    xs = jnp.abs(jax.random.normal(KEY, (96,))) * 0.02 + 1e-4
+    ws = jnp.abs(jax.random.normal(KEY, (192,))) * 0.01 + 1e-4
+    a = w8a8_matmul_pallas(x8, w8, xs, ws, block_m=32, block_n=64,
+                           block_k=32, interpret=True)
+    b = w8a8_matmul_pallas(x8, w8, xs, ws, block_m=96, block_n=192,
+                           block_k=160, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- quant dispatch ----------
+def test_quant_interpret_default_resolves_from_backend(monkeypatch):
+    """Satellite: quant_matmul_pallas / w8a8_matmul_pallas must not default
+    to the interpreter on a TPU backend — interpret=None resolves compiled
+    there and interpreted everywhere else."""
+    import importlib
+
+    # the package re-exports the jitted entry under the same name, so the
+    # kernel MODULE must be resolved explicitly
+    kmod = importlib.import_module("repro.kernels.quant_matmul.quant_matmul")
+
+    assert kmod._default_interpret() is (jax.default_backend() != "tpu")
+    monkeypatch.setattr(kmod.jax, "default_backend", lambda: "tpu")
+    assert kmod._default_interpret() is False
+    monkeypatch.setattr(kmod.jax, "default_backend", lambda: "cpu")
+    assert kmod._default_interpret() is True
+
+
+def test_quant_ops_auto_routes_pallas_compiled_on_tpu(monkeypatch):
+    """The ops auto route on a (mocked) TPU backend must call the Pallas
+    kernel with interpret=False — the TPU path can never silently run
+    interpreted — and the ref oracle elsewhere."""
+    from repro.kernels.quant_matmul import ops as qm_ops
+
+    seen = []
+    monkeypatch.setattr(qm_ops._kmod, "quant_matmul_pallas",
+                        lambda x, w8, s, interpret, **kw:
+                        seen.append(("w8-pallas", interpret)) or x)
+    monkeypatch.setattr(qm_ops._kmod, "w8a8_matmul_pallas",
+                        lambda x8, w8, xs, ws, interpret, **kw:
+                        seen.append(("w8a8-pallas", interpret)) or x8)
+    monkeypatch.setattr(qm_ops._rmod, "quant_matmul_ref",
+                        lambda *a, **kw: seen.append(("w8-ref", None)) or a[0])
+    monkeypatch.setattr(qm_ops._rmod, "w8a8_matmul_ref",
+                        lambda *a, **kw: seen.append(("w8a8-ref", None))
+                        or a[0])
+    x = jnp.ones((4, 32))
+    w8 = jnp.zeros((32, 16), jnp.int8)
+    s = jnp.ones((16,))
+
+    monkeypatch.setattr(qm_ops.jax, "default_backend", lambda: "tpu")
+    qm_ops._quant_matmul(x, w8, s)
+    qm_ops._quant_matmul_w8a8(x, w8, s)
+    monkeypatch.setattr(qm_ops.jax, "default_backend", lambda: "cpu")
+    qm_ops._quant_matmul(x, w8, s)
+    qm_ops._quant_matmul_w8a8(x, w8, s)
+    assert seen == [("w8-pallas", False), ("w8a8-pallas", False),
+                    ("w8-ref", None), ("w8a8-ref", None)]
+
+
+def test_w8a8_ops_backend_dispatch():
+    """The jit ops wrapper: 'ref' and 'interpret' routes agree bitwise
+    (integer accumulation on both)."""
+    x = jax.random.normal(KEY, (5, 32))
+    w8 = jax.random.randint(KEY, (32, 40), -127, 128, jnp.int32
+                            ).astype(jnp.int8)
+    s = jnp.full((40,), 0.03)
+    a = quant_matmul_w8a8(x, w8, s, backend="ref")
+    b = quant_matmul_w8a8(x, w8, s, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------- rmsnorm --

@@ -13,13 +13,17 @@ import jax.numpy as jnp
 from repro import perf_flags
 from repro.configs import get_config
 from repro.core.bucketing import BucketedEmbedderBackend, length_bucket_fn
-from repro.core.estimator import estimate_depth_per_bucket
-from repro.core.routing import NPU, LengthAwarePolicy, Query, TierSpec
+from repro.core.estimator import (LatencyFit, estimate_depth,
+                                  estimate_depth_per_bucket, quantized_fit)
+from repro.core.routing import (CPU, NPU, LengthAwarePolicy, PredictivePolicy,
+                                Query, TierSpec)
 from repro.core.sharded_backend import ShardedEmbedderBackend
+from repro.core.simulator import PAPER_DEVICES, profile_fn_for, quantized_model
 from repro.core.windve import JaxEmbedderBackend, WindVE
 from repro.models import embedder, layers as L
 from repro.models.quantize import (EMBED_DTYPES, is_quantized, quantize_dense,
-                                   quantize_params, serve_params)
+                                   quantize_params, serve_params,
+                                   wants_act_quant)
 
 KEY = jax.random.PRNGKey(0)
 MAX_TOKENS = 64
@@ -106,9 +110,31 @@ class TestQuantizeParams:
         assert tb["embed"].dtype == jnp.bfloat16 and cb == jnp.bfloat16
         t8, c8 = serve_params(params, "int8")
         assert is_quantized(t8) and c8 == jnp.float32
+        ta, ca = serve_params(params, "int8_w8a8")
+        assert is_quantized(ta) and ca == jnp.float32
         with pytest.raises(ValueError, match="fp32|bf16|int8"):
             serve_params(params, "fp16")
-        assert set(EMBED_DTYPES) == {"fp32", "bf16", "int8"}
+        assert set(EMBED_DTYPES) == {"fp32", "bf16", "int8", "int8_w8a8"}
+        assert wants_act_quant("int8_w8a8")
+        assert not any(wants_act_quant(d) for d in ("fp32", "bf16", "int8",
+                                                    None))
+
+    def test_unknown_embed_dtype_rejected_both_spellings(self, bge_smoke):
+        """Both entry points name the FULL valid set (incl. int8_w8a8) when
+        rejecting a policy: serve_params at backend construction and
+        parse_opt at the CLI."""
+        cfg, params = bge_smoke
+        with pytest.raises(ValueError) as e1:
+            serve_params(params, "w8a8")
+        with pytest.raises(ValueError) as e2:
+            perf_flags.parse_opt("embed_dtype=w8a8")
+        for err in (str(e1.value), str(e2.value)):
+            for valid in EMBED_DTYPES:
+                assert valid in err
+            assert "w8a8'" in err or "'w8a8'" in err
+        # the value check guards parse time, not just first backend build
+        with pytest.raises(ValueError, match="int8_w8a8"):
+            perf_flags.parse_opt("embed_donate=1,embed_dtype=int9")
 
 
 # ------------------------------------------------- dense-apply routing ----
@@ -129,15 +155,50 @@ class TestDenseApplyRouting:
         want = np.asarray(x @ w)
         assert np.abs(got - want).max() <= 0.05 * np.abs(want).max()
 
+    def test_act_quant_routes_w8a8(self, monkeypatch):
+        """With a scale sibling AND act_quant on, dense_apply must take the
+        W8A8 kernel (and stay on weight-only / plain matmul otherwise)."""
+        from repro.kernels.quant_matmul import ops as qm_ops
+
+        calls = []
+        monkeypatch.setattr(
+            qm_ops, "quant_matmul_w8a8",
+            lambda x, w8, s, **kw: calls.append("w8a8") or x @ w8.astype(
+                x.dtype))
+        monkeypatch.setattr(
+            qm_ops, "quant_matmul",
+            lambda x, w8, s, **kw: calls.append("w8") or x @ w8.astype(
+                x.dtype))
+        w = jax.random.normal(KEY, (16, 24))
+        q, s = quantize_dense(w)
+        x = jax.random.normal(KEY, (4, 16))
+        L.dense_apply({"wq": q, "wq_scale": s}, "wq", x, act_quant=True)
+        L.dense_apply({"wq": q, "wq_scale": s}, "wq", x, act_quant=False)
+        L.dense_apply({"wq": w}, "wq", x, act_quant=True)   # float: no-op
+        assert calls == ["w8a8", "w8"]
+
+    def test_w8a8_path_close_to_float(self):
+        w = jax.random.normal(KEY, (64, 96))
+        q, s = quantize_dense(w)
+        p = {"wo": q, "wo_scale": s}
+        x = jax.random.normal(KEY, (8, 64))
+        got = np.asarray(L.dense_apply(p, "wo", x, act_quant=True))
+        want = np.asarray(x @ w)
+        assert np.abs(got - want).max() <= 0.05 * np.abs(want).max()
+        assert got.dtype == want.dtype
+
     @pytest.mark.parametrize("model,pool", [("bge-large-zh-v1.5", "cls"),
                                             ("jina-v2", "mean")])
-    def test_embedder_int8_cosine_parity(self, model, pool):
-        """Acceptance guard: int8 trunk >= 0.99 cosine vs the fp32 oracle
-        for BOTH paper model families (cls and mean pooling)."""
+    @pytest.mark.parametrize("dtype,bar", [("int8", 0.99),
+                                           ("int8_w8a8", 0.98)])
+    def test_embedder_quantized_cosine_parity(self, model, pool, dtype, bar):
+        """Acceptance guard: int8 trunk >= 0.99 and W8A8 trunk >= 0.98
+        cosine vs the fp32 oracle for BOTH paper model families (cls and
+        mean pooling)."""
         cfg = get_config(model).smoke()
         assert cfg.pool == pool
         params = embedder.init_embedder(KEY, cfg)
-        qp, cdt = serve_params(params, "int8")
+        qp, cdt = serve_params(params, dtype)
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 40), 1,
                                   cfg.vocab_size)
         mask = (jnp.arange(40)[None, :] <
@@ -145,11 +206,12 @@ class TestDenseApplyRouting:
         a = np.asarray(embedder.embed(params, cfg, toks, mask,
                                       compute_dtype=jnp.float32))
         b = np.asarray(embedder.embed(qp, cfg, toks, mask,
-                                      compute_dtype=cdt))
+                                      compute_dtype=cdt,
+                                      act_quant=wants_act_quant(dtype)))
         assert b.dtype == np.float32
         np.testing.assert_allclose(np.linalg.norm(b, axis=-1), 1.0,
                                    atol=1e-3)
-        assert min_cosine(a, b) >= 0.99
+        assert min_cosine(a, b) >= bar
 
 
 # ------------------------------------------------- serving backends -------
@@ -248,6 +310,174 @@ class TestInt8Backends:
         for g, w in zip(got, want):
             assert min_cosine(np.asarray(g)[None], np.asarray(w)[None]) \
                 >= 0.99
+
+
+# ------------------------------------------------- W8A8 serving ----------
+class TestW8A8Backends:
+    def test_all_three_backends_agree(self, bge_smoke):
+        """Fixed, bucketed and 1-device sharded W8A8 paths serve the same
+        vectors (the bucketed/sharded degrade contract, fully quantized)."""
+        cfg, params = bge_smoke
+        qs = queries([12, 30, 55, 20, 44, 9], payloads=True,
+                     vocab=cfg.vocab_size)
+        fix = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                 dtype="int8_w8a8")
+        buck = BucketedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                       min_seq_bucket=8, dtype="int8_w8a8")
+        shard = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                       min_seq_bucket=8, dtype="int8_w8a8")
+        assert fix.act_quant and buck.act_quant and shard.act_quant
+        a = np.stack(fix.embed_batch(qs))
+        b = np.stack(buck.embed_batch(qs))
+        c = np.stack(shard.embed_batch(qs))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        np.testing.assert_allclose(b, c, atol=1e-5)
+        assert "int8_w8a8" in fix.name and "int8_w8a8" in buck.name \
+            and "int8_w8a8" in shard.name
+
+    def test_sharded_w8a8_parity_and_footprint(self, bge_smoke):
+        cfg, params = bge_smoke
+        oracle = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                        dtype="fp32")
+        i8 = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    dtype="int8")
+        w8a8 = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                      dtype="int8_w8a8")
+        qs = queries([12, 30, 55, 20, 44, 9], payloads=True,
+                     vocab=cfg.vocab_size)
+        a = np.stack(oracle.embed_batch(qs))
+        b = np.stack(w8a8.embed_batch(qs))
+        assert a.dtype == b.dtype == np.float32
+        np.testing.assert_allclose(np.linalg.norm(b, axis=-1), 1.0,
+                                   atol=1e-3)
+        assert min_cosine(a, b) >= 0.98
+        # same resident tree as weight-only int8 — activation quantization
+        # is a trace-time choice, not a second copy of the weights
+        assert w8a8.params_nbytes == i8.params_nbytes
+        assert w8a8.serve_dtype == jnp.float32   # trunk dequantizes to fp32
+        assert not oracle.act_quant and not i8.act_quant and w8a8.act_quant
+
+    def test_prewarm_then_zero_serving_retraces(self, bge_smoke):
+        """W8A8 composes with donation + async dispatch + bucketing and the
+        dynamic activation quantization does NOT add steady-state retraces
+        (the per-batch scales are traced values, not cache keys)."""
+        cfg, params = bge_smoke
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS,
+                                    min_seq_bucket=8, dtype="int8_w8a8",
+                                    donate=True, async_dispatch=True)
+        grid = be.warm_grid(max_batch=4)
+        n = be.prewarm(grid)
+        assert n == len(grid) == be.traces
+        for lens in ([5], [9, 9], [40, 33, 20], [7, 7, 7, 60]):
+            be.embed_batch(queries(lens))
+        assert be.traces == n, "w8a8 serving retraced despite prewarm"
+        assert be.bucket_hits > 0
+
+    def test_flag_selects_w8a8_default(self, bge_smoke):
+        cfg, params = bge_smoke
+        try:
+            perf_flags.set_flags(embed_dtype="int8_w8a8")
+            be = ShardedEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+            assert be.dtype == "int8_w8a8"
+            assert is_quantized(be.params) and be.act_quant
+        finally:
+            perf_flags.reset_flags()
+
+    def test_parse_opt_w8a8_roundtrip(self):
+        kw = perf_flags.parse_opt("embed_dtype=int8_w8a8,embed_donate=1,"
+                                  "embed_async=1")
+        assert kw["embed_dtype"] == "int8_w8a8"
+        flags = perf_flags.set_flags(**kw)
+        assert flags.embed_dtype == "int8_w8a8"
+        perf_flags.reset_flags()
+
+    def test_engine_serves_w8a8_with_bucketing_async_donate(self, bge_smoke):
+        """embed_dtype=int8_w8a8 composes with donation, async dispatch and
+        length-aware bucketed batch formation under the real engine; every
+        future receives ITS query's embedding (>= 0.98 cosine vs the fp32
+        oracle serving the same payload)."""
+        cfg, params = bge_smoke
+        be = ShardedEmbedderBackend(cfg, params, max_tokens=32,
+                                    min_seq_bucket=8, dtype="int8_w8a8",
+                                    donate=True, async_dispatch=True)
+        oracle = ShardedEmbedderBackend(cfg, params, max_tokens=32,
+                                        min_seq_bucket=8, dtype="fp32")
+        rng = np.random.default_rng(11)
+        payloads = [rng.integers(1, cfg.vocab_size, 20) for _ in range(12)]
+        ve = WindVE(tiers=[TierSpec(NPU, 64, backend=be, max_batch=3,
+                                    bucket_fn=length_bucket_fn(8, 32))])
+        try:
+            futs = [ve.submit(payload=p, length=len(p)) for p in payloads]
+            got = [f.result(timeout=60) for f in futs]
+        finally:
+            ve.shutdown()
+        want = oracle.embed_batch(
+            [Query(qid=100 + i, payload=p, length=len(p))
+             for i, p in enumerate(payloads)])
+        for g, w in zip(got, want):
+            assert min_cosine(np.asarray(g)[None], np.asarray(w)[None]) \
+                >= 0.98
+
+
+# ------------------------------------- quantized-tier calibration ---------
+class TestQuantizedCalibration:
+    """Satellite: the measured W8A8 ``beta_s`` feeds back into the Eq. 12
+    machinery, so depth estimation and predictive dispatch price the
+    quantized tier correctly."""
+
+    def test_quantized_fit_scales_slope_only(self):
+        fit = LatencyFit(alpha=0.1, beta=0.3, r2=0.99)
+        qf = quantized_fit(fit, 0.6)
+        assert qf.alpha == pytest.approx(0.06)
+        assert qf.beta == fit.beta and qf.r2 == fit.r2
+        with pytest.raises(ValueError):
+            quantized_fit(fit, 0.0)
+
+    def test_w8a8_modeled_depth_at_least_fp32(self):
+        """Fitted depth for the W8A8-modeled backend >= fp32 depth on the
+        same device (and strictly greater when the slope actually binds)."""
+        dev = PAPER_DEVICES["xeon-e5-2690/bge"]
+        d_f32, fit_f32 = estimate_depth(profile_fn_for(dev), 2.0)
+        q = quantized_model(dev, 0.6)
+        d_q, fit_q = estimate_depth(profile_fn_for(q), 2.0)
+        assert d_q >= d_f32 > 0
+        assert d_q > d_f32          # 0.6x slope must buy real depth at 2s
+        assert fit_q.alpha < fit_f32.alpha
+        # the offline shortcut (scale the fp32 fit) prices the quantized
+        # tier like re-profiling the scaled device does
+        short = quantized_fit(fit_f32, 0.6)
+        assert short.max_concurrency(2.0) > d_f32
+        assert short.max_concurrency(2.0) == pytest.approx(d_q, rel=0.15)
+        with pytest.raises(ValueError):
+            quantized_model(dev, -1.0)
+
+    def test_per_bucket_w8a8_depths_dominate_fp32(self):
+        dev = PAPER_DEVICES["xeon-e5-2690/bge"]
+        q = quantized_model(dev, 0.5)
+
+        def profile(d):
+            return lambda c, length: d.latency(c, length)
+
+        f32 = estimate_depth_per_bucket(profile(dev), 2.0, [16, 64, 128])
+        w8 = estimate_depth_per_bucket(profile(q), 2.0, [16, 64, 128])
+        assert all(w8[b][0] >= f32[b][0] for b in (16, 64, 128))
+        assert any(w8[b][0] > f32[b][0] for b in (16, 64, 128))
+
+    def test_predictive_policy_prefers_w8a8_tier_at_equal_backlog(self):
+        """Two CPU tiers, same device, one serving W8A8: at equal backlog
+        the predictive policy must order the quantized tier first."""
+        from repro.core.queue_manager import QueueManager
+
+        base = LatencyFit(alpha=0.2, beta=0.3, r2=1.0)
+        pol = PredictivePolicy(fits={CPU: base,
+                                     "CPU-w8a8": quantized_fit(base, 0.5)})
+        tiers = [TierSpec(CPU, 8), TierSpec("CPU-w8a8", 8)]
+        qm = QueueManager(tiers)
+        for i in range(3):      # equal backlog on both tiers
+            assert qm.queues[CPU].push(Query(qid=i, length=20))
+            assert qm.queues["CPU-w8a8"].push(Query(qid=10 + i, length=20))
+        order = pol.candidates(Query(qid=99, length=20), tiers, qm)
+        assert order[0] == "CPU-w8a8"
 
 
 # ---------------------------------------------- per-bucket Eq. 12 fits ----

@@ -433,6 +433,28 @@ ref8 = ShardedEmbedderBackend(cfg, params, max_tokens=32, dtype="int8",
                               devices=jax.devices()[:1], min_seq_bucket=8)
 np.testing.assert_allclose(out8, np.stack(ref8.embed_batch(qs)), atol=1e-5)
 print("SHARDED-8DEV-INT8-OK")
+
+# W8A8 (int8 weights AND dynamically quantized activations) composes with
+# the full mesh stack too: same int8 resident tree, act_quant switched on,
+# vectors match the 1-device W8A8 mesh exactly
+qaa = ShardedEmbedderBackend(cfg, params, max_tokens=32, dtype="int8_w8a8",
+                             donate=True, async_dispatch=True,
+                             min_seq_bucket=8)
+assert qaa.act_quant and not q8.act_quant
+leaves = jax.tree.leaves(qaa.params)
+assert any(l.dtype == jnp.int8 for l in leaves)
+for leaf in leaves:
+    assert len(leaf.sharding.device_set) == 8
+fetch = qaa.embed_batch_async(qs)
+outaa = np.stack(fetch())
+refaa = ShardedEmbedderBackend(cfg, params, max_tokens=32,
+                               dtype="int8_w8a8",
+                               devices=jax.devices()[:1], min_seq_bucket=8)
+np.testing.assert_allclose(outaa, np.stack(refaa.embed_batch(qs)),
+                           atol=1e-5)
+# activation quantization actually changed the computation vs weight-only
+assert float(np.abs(outaa - out8).max()) > 0.0
+print("SHARDED-8DEV-W8A8-OK")
 """
 
 
@@ -451,6 +473,7 @@ def test_eight_device_mesh_end_to_end(bge_smoke):
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "SHARDED-8DEV-OK" in proc.stdout
     assert "SHARDED-8DEV-INT8-OK" in proc.stdout
+    assert "SHARDED-8DEV-W8A8-OK" in proc.stdout
 
 
 def test_serve_devices_clamps_to_pow2():
