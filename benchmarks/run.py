@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.bucketing_microbench",  # shape bucketing vs fixed padding
     "benchmarks.sharded_embed_microbench",  # device mesh fan-out + bf16
     "benchmarks.quant_embed_microbench",    # int8 weight-only CPU tier
+    "benchmarks.cache_microbench",  # zero-cost exact-match cache tier
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 

@@ -4,7 +4,16 @@
 # affinity planner (§4.4), calibrated discrete-event simulator and the real
 # threaded serving engine.
 from repro.core import (affinity, cost_model, device_detector, estimator,
-                        queue_manager, routing, simulator, telemetry, windve)
+                        routing, simulator, telemetry, windve)
 
 __all__ = ["affinity", "cost_model", "device_detector", "estimator",
            "queue_manager", "routing", "simulator", "telemetry", "windve"]
+
+
+def __getattr__(name):
+    # the deprecated queue_manager alias warns on import; load it lazily so
+    # only call sites that actually reach for it pay (and see) the warning
+    if name == "queue_manager":
+        from repro.core import queue_manager
+        return queue_manager
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

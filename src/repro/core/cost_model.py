@@ -93,6 +93,29 @@ def fanout_efficiency(depth_n: int, depth_1: int, devices: int) -> float:
     return depth_n / (devices * depth_1)
 
 
+def cache_uplift(hit_rate: float) -> float:
+    """Effective-concurrency uplift from an exact-match cache tier serving
+    hit fraction p at ~zero latency: only (1 - p) of arrivals consume a
+    device slot, so system capacity (and the Eq. 5/6 deployment-cost
+    denominators) scale by 1 / (1 - p).  p = 0.5 doubles capacity — more
+    than any single-device speedup in Tables 1-2 buys."""
+    if not 0.0 <= hit_rate < 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1), got {hit_rate}")
+    return 1.0 / (1.0 - hit_rate)
+
+
+def cached_depth(depth: int, hit_rate: float) -> int:
+    """Arrival-level SLO-safe concurrency of a device tier of depth
+    ``depth`` behind a cache with hit fraction p: the device still bounds
+    its RESIDENT load at ``depth``, but the arrival stream that load maps
+    to is ``depth / (1 - p)`` — the closed form of
+    ``estimator.cached_fit(fit, p).max_concurrency(slo)`` (p of the extra
+    arrivals are hits that never occupy a slot)."""
+    if depth < 0:
+        raise ValueError("depth must be >= 0")
+    return math.floor(depth * cache_uplift(hit_rate) + 1e-9)
+
+
 def concurrency_uplift_bound(alpha_npu: float, alpha_cpu: float) -> float:
     """Ineq. 19: C_CPU/C_NPU < alpha_NPU/alpha_CPU — the uplift is bounded by
     the device performance-gap ratio."""

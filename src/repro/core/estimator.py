@@ -82,6 +82,31 @@ def quantized_fit(fit: LatencyFit, slope_scale: float) -> LatencyFit:
     return LatencyFit(fit.alpha * slope_scale, fit.beta, fit.r2)
 
 
+def cached_fit(fit: LatencyFit, hit_rate: float) -> LatencyFit:
+    """Re-price an Eq. 12 fit for a device tier sitting BEHIND a cache tier.
+
+    With an exact-match cache at the head of the topology serving hit
+    fraction ``p`` at ~zero latency and zero FLOPs, only ``(1 - p)`` of the
+    arrival stream ever reaches the device: at arrival-level concurrency C
+    the device's resident load is ``(1 - p) * C``, so the service curve the
+    ARRIVAL stream experiences is
+
+        t(C) = beta + alpha * (1 - p) * C ,
+
+    i.e. the per-query slope shrinks by ``(1 - p)`` while the fixed cost
+    stays — the same transform shape as ``quantized_fit``, with the scale
+    coming from traffic skew instead of GEMM precision.  The resulting
+    ``max_concurrency`` is the ARRIVAL-level depth,
+    ``floor((T - beta) / (alpha * (1 - p)))`` — the honest Eq. 12 depth
+    when a fraction p of traffic never reaches the device (its closed form
+    is ``cost_model.cached_depth``).  ``hit_rate`` must be < 1: an
+    all-hits tier needs no device to price.
+    """
+    if not 0.0 <= hit_rate < 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1), got {hit_rate}")
+    return LatencyFit(fit.alpha * (1.0 - hit_rate), fit.beta, fit.r2)
+
+
 def fanout_probe_points(devices: int,
                         base: Sequence[int] = (1, 4, 16, 64),
                         ) -> Tuple[int, ...]:

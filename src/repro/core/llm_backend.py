@@ -13,7 +13,7 @@ from typing import List, Sequence
 
 import numpy as np
 
-from repro.core.queue_manager import Query
+from repro.core.routing import Query
 from repro.core.windve import Backend
 
 

@@ -1,17 +1,31 @@
-"""Compat shim — the queue manager now lives in ``repro.core.routing``.
+"""DEPRECATED compat shim — the queue manager lives in ``repro.core.routing``.
 
 The seed's two-queue Algorithm 1 grew into the policy-driven N-tier
 scheduling core shared by the threaded engine, the DES and the online
-calibrator.  Everything this module used to define is re-exported so
-``from repro.core.queue_manager import QueueManager`` (and the NPU/CPU/BUSY
-constants, ``Query``, ``BoundedQueue``, ``DispatchStats``) keeps working;
-new code should import from :mod:`repro.core.routing` directly.
+calibrator; batch formation has exactly ONE import path —
+``repro.core.routing.QueueManager.pop_batch`` — and this module is a pure,
+documented re-export kept only so pre-refactor call sites
+(``from repro.core.queue_manager import QueueManager`` and the NPU/CPU/BUSY
+constants, ``Query``, ``BoundedQueue``, ``DispatchStats``) keep importing.
+
+It defines nothing of its own and never will: new code must import from
+:mod:`repro.core.routing` (scheduling) / :mod:`repro.core.telemetry`
+(stats) directly.  Importing this module emits a ``DeprecationWarning`` so
+lingering call sites surface in test logs rather than silently pinning the
+alias forever.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.core.routing import (BUSY, CPU, NPU, BoundedQueue, CascadePolicy,
                                 DispatchPolicy, Query, QueueManager, TierSpec)
 from repro.core.telemetry import DispatchStats, Telemetry
+
+warnings.warn(
+    "repro.core.queue_manager is a deprecated alias; import from "
+    "repro.core.routing (scheduling) / repro.core.telemetry (stats) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["BUSY", "CPU", "NPU", "BoundedQueue", "CascadePolicy",
            "DispatchPolicy", "DispatchStats", "Query", "QueueManager",

@@ -51,6 +51,7 @@ class Query:
     device: Optional[str] = None
     start_t: float = 0.0
     done_t: float = 0.0
+    emb: Any = None              # filled by a cache-tier hit at dispatch
 
     @property
     def e2e_latency(self) -> float:
@@ -136,6 +137,14 @@ class TierSpec:
     ``BoundedQueue.pop_batch``).  Pair it with a shape-bucketed backend
     (``repro.core.bucketing``) so intra-batch padding collapses to the
     bucket boundary.
+
+    ``cache`` (optional, an ``repro.core.cache.EmbeddingCache``) makes this
+    a *zero-latency cache tier*: it holds no queue and no device —
+    ``QueueManager.dispatch`` consults it before policy dispatch, a hit
+    completes the query immediately, and the drivers admit computed
+    embeddings back via ``QueueManager.admit``.  Cache tiers are invisible
+    to ``DispatchPolicy.candidates`` (see :func:`dispatchable`): they have
+    no queue depth to fill and no service curve to price.
     """
 
     name: str
@@ -145,6 +154,17 @@ class TierSpec:
     max_batch: Optional[int] = None
     workers: int = 1
     bucket_fn: Optional[Callable[[Query], Any]] = None
+    cache: Any = None
+
+
+def dispatchable(tiers: Sequence[TierSpec]) -> List[TierSpec]:
+    """The tiers a policy may route a query into: everything but the
+    zero-latency cache tiers.  A cache tier is consulted by
+    ``QueueManager.dispatch`` BEFORE the policy runs (a hit never reaches a
+    device), has no bounded queue to push into, no backlog to price and no
+    Eq. 12 service curve — so every policy ranks over this filtered list.
+    """
+    return [t for t in tiers if t.cache is None]
 
 
 class DispatchPolicy:
@@ -167,7 +187,7 @@ class CascadePolicy(DispatchPolicy):
     name = "cascade"
 
     def candidates(self, query, tiers, qm):
-        return [t.name for t in tiers]
+        return [t.name for t in dispatchable(tiers)]
 
 
 class LengthAwarePolicy(DispatchPolicy):
@@ -220,9 +240,12 @@ class LengthAwarePolicy(DispatchPolicy):
         return cls(long_threshold=threshold, fast_tiers=fast_tiers)
 
     def candidates(self, query, tiers, qm):
+        # fast_tiers counts REAL device tiers: a cache tier at the head of
+        # the topology must not eat the fast slot(s)
+        real = dispatchable(tiers)
         if query.length >= self.long_threshold:
-            return [t.name for t in tiers[:self.fast_tiers]]
-        return [t.name for t in tiers]
+            return [t.name for t in real[:self.fast_tiers]]
+        return [t.name for t in real]
 
 
 class LeastLoadedPolicy(DispatchPolicy):
@@ -235,13 +258,15 @@ class LeastLoadedPolicy(DispatchPolicy):
     name = "least-loaded"
 
     def candidates(self, query, tiers, qm):
+        real = dispatchable(tiers)
+
         def free_share(t: TierSpec) -> float:
             d = qm.depth(t.name)
             return (d - len(qm.queues[t.name])) / d if d > 0 else -1.0
 
-        order = sorted(range(len(tiers)),
-                       key=lambda i: (-free_share(tiers[i]), i))
-        return [tiers[i].name for i in order]
+        order = sorted(range(len(real)),
+                       key=lambda i: (-free_share(real[i]), i))
+        return [real[i].name for i in order]
 
 
 class PredictivePolicy(DispatchPolicy):
@@ -305,13 +330,19 @@ class PredictivePolicy(DispatchPolicy):
         return float(fit.latency(len(qm.queues[tier]) + 1))
 
     def candidates(self, query, tiers, qm):
+        # cache tiers never appear as candidates: a hit completed at
+        # dispatch (predicted completion ~0 needs no pricing) and a MISS by
+        # definition cannot be served there — only device tiers hold a
+        # backlog for the fits to price
+        real = dispatchable(tiers)
+
         def key(i: int):
-            p = self.predicted_completion_s(tiers[i].name, query, qm)
+            p = self.predicted_completion_s(real[i].name, query, qm)
             # fitted tiers first, cheapest predicted completion wins;
             # unfitted tiers trail in cascade order (graceful degrade)
             return (0, p, i) if p is not None else (1, 0.0, i)
 
-        return [tiers[i].name for i in sorted(range(len(tiers)), key=key)]
+        return [real[i].name for i in sorted(range(len(real)), key=key)]
 
 
 class QueueManager:
@@ -340,9 +371,15 @@ class QueueManager:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
         self.tiers: List[TierSpec] = list(tiers)
+        # zero-latency cache tiers are consulted before policy dispatch and
+        # hold no bounded queue (a hit never occupies a concurrency slot)
+        self.cache_tiers: List[TierSpec] = [t for t in self.tiers
+                                            if t.cache is not None]
+        if not dispatchable(self.tiers):
+            raise ValueError("need at least one non-cache tier")
         self.policy: DispatchPolicy = policy or CascadePolicy()
         self.queues: Dict[str, BoundedQueue] = {
-            t.name: BoundedQueue(t.depth) for t in self.tiers}
+            t.name: BoundedQueue(t.depth) for t in dispatchable(self.tiers)}
         self.stats: Telemetry = stats if stats is not None else Telemetry()
         self._lock = threading.Lock()
 
@@ -352,16 +389,53 @@ class QueueManager:
         """Legacy flag: True iff an auxiliary tier exists."""
         return len(self.tiers) > 1
 
+    def is_cache_tier(self, name: str) -> bool:
+        return any(t.name == name for t in self.cache_tiers)
+
     def dispatch(self, query: Query) -> str:
-        """Route one query.  Returns the admitting tier's name, or BUSY."""
+        """Route one query.  Returns the admitting tier's name, or BUSY.
+
+        Cache tiers are consulted first, in topology order: an exact-match
+        hit fills ``query.emb``, counts as a dispatch to (and completion
+        responsibility of) the cache tier, and never touches a device queue
+        — the driver must complete the query immediately (zero service
+        time).  Misses record per-tier miss telemetry and fall through to
+        normal policy dispatch.  ``query.arrival_t`` is the lookup clock, so
+        hit staleness is exact under both drivers (monotonic / sim time).
+        """
         with self._lock:
+            for ct in self.cache_tiers:
+                entry = ct.cache.get(query, now=query.arrival_t)
+                if entry is not None:
+                    query.device = ct.name
+                    query.emb = entry.value
+                    self.stats.record_dispatch(ct.name)
+                    self.stats.record_cache_hit(
+                        ct.name, max(0.0, query.arrival_t - entry.t))
+                    return ct.name
+                self.stats.record_cache_miss(ct.name)
             for name in self.policy.candidates(query, self.tiers, self):
+                if name not in self.queues:     # custom policies may emit
+                    continue                    # cache-tier names: skip
                 if self.queues[name].push(query):
                     query.device = name
                     self.stats.record_dispatch(name)
                     return name
             self.stats.record_busy()
             return BUSY
+
+    def admit(self, query: Query, value: Any = None) -> Optional[str]:
+        """Admission hook: insert one computed embedding into the head
+        cache tier (if any).  Drivers call this per completed query, BEFORE
+        resolving its future — so any caller that observed a result can
+        rely on the key being cached.  ``query.done_t`` timestamps the
+        entry (the staleness clock under either driver).  Returns the
+        admitting cache tier's name, or None when the topology has none."""
+        for ct in self.cache_tiers:
+            evicted = ct.cache.put(query, value, now=query.done_t)
+            self.stats.record_cache_insert(ct.name, evicted)
+            return ct.name
+        return None
 
     def tier(self, name: str) -> TierSpec:
         for t in self.tiers:
@@ -395,12 +469,15 @@ class QueueManager:
                                              self.tier(device).bucket_fn)
 
     def reset(self, stats: Optional[Telemetry] = None) -> Telemetry:
-        """Fresh queues (at current depths) + fresh telemetry — one DES run."""
+        """Fresh queues (at current depths), empty caches + fresh telemetry
+        — one DES run starts cold and deterministic."""
         with self._lock:
             self.queues = {t.name: BoundedQueue(self.depth(t.name) if
                                                 t.name in self.queues else
                                                 t.depth)
-                           for t in self.tiers}
+                           for t in dispatchable(self.tiers)}
+            for ct in self.cache_tiers:
+                ct.cache.clear()
             self.stats = stats if stats is not None else Telemetry()
         return self.stats
 

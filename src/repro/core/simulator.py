@@ -272,7 +272,7 @@ class ServingSimulator:
                 tiers.append(TierSpec(CPU, cpu_depth, model=cpu))
         tiers = list(tiers)
         for t in tiers:
-            if t.model is None:
+            if t.model is None and t.cache is None:
                 raise ValueError(f"tier {t.name!r} has no DeviceModel")
         self.qm = QueueManager(tiers, policy=policy,
                                stats=Telemetry(slo=slo_s))
@@ -294,16 +294,25 @@ class ServingSimulator:
         return self.run([(0.0, self.length)] * n_queries)
 
     def run(self, arrivals: List[Tuple[float, int]]) -> SimResult:
-        """arrivals: list of (time, query_length)."""
+        """arrivals: list of (time, query_length) or (time, query_length,
+        payload) — the optional payload gives a query its cache identity
+        (exact-match key) when the topology carries a cache tier; without
+        it, payload-less queries of one length share one key, mirroring the
+        engine's deterministic synthetic token streams."""
         res = self.qm.reset(stats=Telemetry(slo=self.slo))
         # event key: (time, priority, seq) — device "kick"s run AFTER every
         # same-instant arrival so a burst is batched, not started one-by-one
         events: List[Tuple[float, int, int, str, object]] = []
-        for i, (t, ln) in enumerate(arrivals):
+        for i, arr in enumerate(arrivals):
+            t, ln = arr[0], arr[1]
+            payload = arr[2] if len(arr) > 2 else None
             heapq.heappush(events, (t, 0, i, "arrive",
-                                    Query(qid=i, length=ln, arrival_t=t)))
-        free_at = {t.name: 0.0 for t in self.qm.tiers}
-        models = {t.name: t.model for t in self.qm.tiers}
+                                    Query(qid=i, payload=payload, length=ln,
+                                          arrival_t=t)))
+        device_tiers = [t for t in self.qm.tiers if t.cache is None]
+        admit = bool(self.qm.cache_tiers)
+        free_at = {t.name: 0.0 for t in device_tiers}
+        models = {t.name: t.model for t in device_tiers}
         seq = len(arrivals)
 
         def nseq() -> int:
@@ -331,8 +340,15 @@ class ServingSimulator:
             now, _, _, kind, obj = heapq.heappop(events)
             if kind == "arrive":
                 verdict = self.qm.dispatch(obj)
-                if verdict != BUSY:
-                    heapq.heappush(events, (now, 1, nseq(), "kick", verdict))
+                if verdict == BUSY:
+                    continue
+                if self.qm.is_cache_tier(verdict):
+                    # zero-latency tier: the hit completes at +0 service
+                    # time — no queue slot, no device event
+                    obj.done_t = now
+                    res.record_completion(obj, verdict)
+                    continue
+                heapq.heappush(events, (now, 1, nseq(), "kick", verdict))
             elif kind == "kick":
                 try_start(obj, now)
             else:
@@ -340,6 +356,11 @@ class ServingSimulator:
                 for q in batch:
                     q.done_t = now
                     res.record_completion(q, tier)
+                    if admit:
+                        # admission hook: the computed embedding (a value
+                        # the DES never materializes) enters the cache the
+                        # instant its batch completes
+                        self.qm.admit(q)
                 self.qm.queues[tier].finish(len(batch))
                 try_start(tier, now)
         return res

@@ -41,6 +41,13 @@ class Telemetry:
     truncated: int = 0
     dispatched: Dict[str, int] = field(default_factory=dict)
     per_device: Dict[str, int] = field(default_factory=dict)
+    # zero-cost cache tier counters, keyed by cache tier name; hit ages are
+    # entry staleness samples (hit time - insert time, driver clock)
+    cache_hits: Dict[str, int] = field(default_factory=dict)
+    cache_misses: Dict[str, int] = field(default_factory=dict)
+    cache_inserts: Dict[str, int] = field(default_factory=dict)
+    cache_evictions: Dict[str, int] = field(default_factory=dict)
+    cache_hit_ages: Dict[str, List[float]] = field(default_factory=dict)
     completed: List["Query"] = field(default_factory=list)
     latencies: List[float] = field(default_factory=list)
     batch_latencies: List[float] = field(default_factory=list)
@@ -75,6 +82,25 @@ class Telemetry:
         with self._lock:
             self.batch_latencies.append(service_s)
             self.tier_batch_latencies.setdefault(tier, []).append(service_s)
+
+    def record_cache_hit(self, tier: str, age_s: float) -> None:
+        """One exact-match cache hit: the query is served at ~zero latency
+        and zero FLOPs.  ``age_s`` is the entry's staleness at hit time —
+        how long ago the served embedding was computed."""
+        with self._lock:
+            self.cache_hits[tier] = self.cache_hits.get(tier, 0) + 1
+            self.cache_hit_ages.setdefault(tier, []).append(float(age_s))
+
+    def record_cache_miss(self, tier: str) -> None:
+        with self._lock:
+            self.cache_misses[tier] = self.cache_misses.get(tier, 0) + 1
+
+    def record_cache_insert(self, tier: str, evicted: int = 0) -> None:
+        with self._lock:
+            self.cache_inserts[tier] = self.cache_inserts.get(tier, 0) + 1
+            if evicted:
+                self.cache_evictions[tier] = \
+                    self.cache_evictions.get(tier, 0) + int(evicted)
 
     def record_completion(self, query: "Query", tier: str) -> None:
         """The driver sets ``query.done_t`` first; latency is derived."""
@@ -117,6 +143,28 @@ class Telemetry:
         the SLO (the paper's 'maximum concurrency' metric)."""
         return sum(1 for l in self.latencies if l <= self.slo + 1e-9)
 
+    # -- cache-tier readers ------------------------------------------------
+    def cache_hit_rate(self, tier: Optional[str] = None) -> float:
+        """Fraction of cache lookups that hit (``tier`` restricts to one
+        cache tier; default aggregates every cache tier consulted)."""
+        if tier is None:
+            h = sum(self.cache_hits.values())
+            m = sum(self.cache_misses.values())
+        else:
+            h = self.cache_hits.get(tier, 0)
+            m = self.cache_misses.get(tier, 0)
+        return h / (h + m) if (h + m) else 0.0
+
+    def cache_staleness(self, q: float = 50.0,
+                        tier: Optional[str] = None) -> float:
+        """Percentile of entry age at hit time (seconds): how stale the
+        embeddings actually being served from cache are."""
+        if tier is None:
+            ages = [a for v in self.cache_hit_ages.values() for a in v]
+        else:
+            ages = self.cache_hit_ages.get(tier, [])
+        return float(np.percentile(ages, q)) if ages else 0.0
+
     def p(self, q: float) -> float:
         return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
 
@@ -133,8 +181,26 @@ class Telemetry:
     def summary(self) -> Dict[str, float]:
         """One flat record of the run: dispatch verdicts, completions, SLO
         compliance and payload-truncation count (quality loss is surfaced
-        next to latency, not hidden in a backend counter)."""
+        next to latency, not hidden in a backend counter).  When a cache
+        tier was consulted, hit-rate / counter / staleness fields join the
+        record (omitted entirely on cache-less topologies so existing
+        consumers see an unchanged shape)."""
+        cache: Dict[str, float] = {}
+        if self.cache_hits or self.cache_misses or self.cache_inserts:
+            cache = {
+                "cache_hit_rate": self.cache_hit_rate(),
+                "cache_hits": sum(self.cache_hits.values()),
+                "cache_misses": sum(self.cache_misses.values()),
+                "cache_inserts": sum(self.cache_inserts.values()),
+                "cache_evictions": sum(self.cache_evictions.values()),
+                "cache_staleness_p50_s": self.cache_staleness(50),
+                "cache_staleness_p95_s": self.cache_staleness(95),
+                **{f"cache_hit_rate_{k}": self.cache_hit_rate(k)
+                   for k in sorted(set(self.cache_hits)
+                                   | set(self.cache_misses))},
+            }
         return {
+            **cache,
             "accepted": self.accepted,
             "rejected": self.rejected,
             "completed": self.n_completed,

@@ -262,7 +262,10 @@ class WindVE:
         tiers = list(tiers)
         if not tiers:
             raise ValueError("need at least one tier")
-        for t in tiers:
+        # cache tiers (TierSpec.cache set) are zero-latency: no backend, no
+        # queue, no worker thread — hits complete inside submit()
+        device_tiers = [t for t in tiers if t.cache is None]
+        for t in device_tiers:
             if t.backend is None:
                 raise ValueError(f"tier {t.name!r} has no backend")
         # keep_queries=False: a long-running engine must not pin every
@@ -270,7 +273,8 @@ class WindVE:
         self.qm = QueueManager(tiers, policy=policy,
                                stats=Telemetry(keep_queries=False))
         self.stats: EngineStats = self.qm.stats   # one shared Telemetry
-        self.backends: Dict[str, Backend] = {t.name: t.backend for t in tiers}
+        self.backends: Dict[str, Backend] = {t.name: t.backend
+                                             for t in device_tiers}
         for be in self.backends.values():
             # backends report quality events (truncations) into the engine's
             # shared telemetry unless the caller wired their own
@@ -282,12 +286,12 @@ class WindVE:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._wake: Dict[str, threading.Event] = {
-            t.name: threading.Event() for t in tiers}
+            t.name: threading.Event() for t in device_tiers}
         # Algorithm 2's worker counts: N instances may drain one tier's
         # queue (each instance owns its own model copy on real hardware)
         self._threads = [
             threading.Thread(target=self._worker, args=(t.name,), daemon=True)
-            for t in tiers
+            for t in device_tiers
             for _ in range(max(1, t.workers))]
         for t in self._threads:
             t.start()
@@ -330,6 +334,14 @@ class WindVE:
         if verdict == BUSY:
             self._futures.pop(q.qid, None)
             return None
+        if self.qm.is_cache_tier(verdict):
+            # zero-latency tier: the hit already filled q.emb at dispatch —
+            # complete here, no queue slot, no worker, no batch
+            q.done_t = time.monotonic()
+            self.stats.record_completion(q, verdict)
+            self._futures.pop(q.qid, None)
+            fut.set_result(q.emb)
+            return fut
         self._wake[verdict].set()
         return fut
 
@@ -363,9 +375,15 @@ class WindVE:
             service = time.monotonic() - t0
             self.stats.record_batch(tier_name, service)
             now = time.monotonic()
+            admit = bool(self.qm.cache_tiers)
             for q, emb in zip(batch, embs):
                 q.done_t = now
                 self.stats.record_completion(q, tier_name)
+                if admit and not isinstance(emb, Exception):
+                    # admission hook: insert BEFORE the future resolves, so
+                    # a client that saw this result re-submitting the same
+                    # tokens is guaranteed the cache hit
+                    self.qm.admit(q, emb)
                 fut = self._futures.pop(q.qid, None)
                 if fut is not None:
                     if isinstance(emb, Exception):

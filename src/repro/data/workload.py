@@ -60,14 +60,51 @@ class TokenStream:
 
 def query_lengths(n: int, mean: int = 75, jitter: float = 0.0,
                   seed: int = 0) -> List[int]:
-    """Paper workload: fixed 75-token queries by default; optional jitter."""
+    """Paper workload: fixed 75-token queries by default; optional jitter.
+
+    With ``jitter > 0`` lengths are ``Normal(mean, jitter * mean)`` draws
+    rounded to the nearest integer and clamped SYMMETRICALLY into
+    ``[1, 2 * mean - 1]``: the old path truncated toward zero (biasing every
+    draw short) and clamped only the low side, so heavy jitter silently
+    shifted the realized mean.  Rounding plus the symmetric window keeps
+    the sample mean at ``mean`` no matter how large ``jitter`` gets."""
     if jitter <= 0:
         return [mean] * n
     rng = np.random.default_rng(seed)
-    return [max(1, int(x)) for x in rng.normal(mean, jitter * mean, size=n)]
+    hi = max(1, 2 * mean - 1)
+    return [int(np.clip(round(float(x)), 1, hi))
+            for x in rng.normal(mean, jitter * mean, size=n)]
 
 
 def make_queries(n: int, vocab: int, length: int = 75,
                  seed: int = 0) -> List[np.ndarray]:
     rng = np.random.default_rng(seed)
     return [_zipf_tokens(rng, (length,), vocab) for _ in range(n)]
+
+
+def zipf_queries(n: int, vocab: int, alpha: float = 1.1, unique: int = 64,
+                 seed: int = 0, length: int = 75) -> List[np.ndarray]:
+    """Deterministic Zipf-skewed repeat-query trace (the cache workload).
+
+    Draws ``n`` queries from a pool of ``unique`` distinct token payloads
+    with rank-k probability proportional to ``k ** -alpha`` — the skew real
+    query streams show (EdgeRAG's motivating observation): a handful of hot
+    queries dominate, the tail is long.  Repeats are the IDENTICAL token
+    content (same array object), so an exact-match cache keyed on token
+    hashes sees them as hits.  ``alpha ~ 1.1`` with ``unique << n`` yields
+    a >= 50% theoretical repeat rate (at most ``unique`` first occurrences
+    in ``n`` draws); ``alpha = 0`` degrades to uniform sampling over the
+    pool.  Fully deterministic in ``seed`` — reused by the cache microbench
+    and the tier-1 suites, same trace every run."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if unique < 1:
+        raise ValueError("need at least one unique query")
+    if alpha < 0:
+        raise ValueError("alpha must be >= 0 (0 == uniform)")
+    rng = np.random.default_rng(seed)
+    pool = [_zipf_tokens(rng, (length,), vocab) for _ in range(unique)]
+    p = np.arange(1, unique + 1, dtype=np.float64) ** -alpha
+    p /= p.sum()
+    idx = rng.choice(unique, size=n, p=p)
+    return [pool[i] for i in idx]

@@ -36,11 +36,13 @@ from repro import perf_flags
 from repro.configs import get_config
 from repro.core import adaptive
 from repro.core.bucketing import length_bucket_fn
+from repro.core.cache import cache_tier
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import (estimate_depth, estimate_depth_per_bucket,
                                   fanout_probe_points)
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
-                                LengthAwarePolicy, PredictivePolicy, TierSpec)
+                                LengthAwarePolicy, PredictivePolicy, Query,
+                                TierSpec)
 from repro.core.sharded_backend import ShardedEmbedderBackend
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import ModeledBackend, WindVE
@@ -100,7 +102,6 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
 
     def profile_cpu(c: int) -> float:
         qs = make_queries(c, cfg.vocab_size, length=75, seed=seed)
-        from repro.core.queue_manager import Query
         batch = [Query(qid=i, payload=q, length=75) for i, q in enumerate(qs)]
         t0 = time.monotonic()
         cpu_be.embed_batch(batch)
@@ -134,7 +135,6 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         # policy follows the bucketed (and, under embed_dtype=int8,
         # quantized) service curve instead of the hand-picked default
         def profile_bucket(c: int, length: int) -> float:
-            from repro.core.queue_manager import Query
             batch = [Query(qid=i, length=length) for i in range(c)]
             cpu_be.embed_batch(batch)    # warm this (B, S) bucket: the fit
             best = float("inf")          # must see service time, not compile
@@ -165,6 +165,15 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be,
                               bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
                                                          MAX_TOKENS)))
+    # --opt cache=N[,cache_bytes=M]: the zero-cost tier at the head of the
+    # topology — exact-match hits bypass every device queue entirely
+    flags = perf_flags.FLAGS
+    if flags.cache > 0:
+        tiers.insert(0, cache_tier(flags.cache,
+                                   flags.cache_bytes or None))
+        print(f"[serve] cache tier: {flags.cache} entries"
+              + (f", {flags.cache_bytes} bytes" if flags.cache_bytes else "")
+              + " (exact-match LRU at the head of the topology)")
     engine = WindVE(tiers=tiers, policy=policy_obj)
     if policy == "predictive":
         # live fits: every completed batch feeds the calibrator; every refit
@@ -187,8 +196,11 @@ def main() -> None:
     ap.add_argument("--policy", default="cascade", choices=sorted(POLICIES),
                     help="dispatch policy (cascade == paper Algorithm 1)")
     ap.add_argument("--opt", default="",
-                    help="perf flags, e.g. embed_dtype=int8_w8a8,embed_async=1 "
-                         "(embed_dtype: fp32|bf16|int8|int8_w8a8)")
+                    help="perf flags, e.g. embed_dtype=int8_w8a8,embed_async=1"
+                         ",cache=4096,cache_bytes=0 "
+                         "(embed_dtype: fp32|bf16|int8|int8_w8a8; cache=N "
+                         "puts an N-entry exact-match embedding cache at "
+                         "the head of the dispatch topology)")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
     ap.add_argument("--npu-devices", type=int, default=1,
@@ -223,6 +235,13 @@ def main() -> None:
     print(f"[serve] batch service tail: p50={s.batch_p(50)*1e3:.1f}ms "
           f"p95={s.batch_p(95)*1e3:.1f}ms p99={s.batch_p(99)*1e3:.1f}ms "
           f"over {len(s.batch_latencies)} batches  [{tails}]")
+    if s.cache_hits or s.cache_misses:
+        print(f"[serve] cache: hit-rate={s.cache_hit_rate():.1%} "
+              f"hits={sum(s.cache_hits.values())} "
+              f"misses={sum(s.cache_misses.values())} "
+              f"inserts={sum(s.cache_inserts.values())} "
+              f"evictions={sum(s.cache_evictions.values())} "
+              f"staleness p50={s.cache_staleness(50):.2f}s")
     print(f"[serve] max concurrency C = {engine.max_concurrency}")
     engine.shutdown()
 

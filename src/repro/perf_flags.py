@@ -85,6 +85,16 @@ class PerfFlags:
     # engine worker overlaps batch N's compute with batch N-1's
     # device->host fetch (double buffering) instead of blocking per batch.
     embed_async: bool = False
+    # serving: N > 0 puts an exact-match embedding cache of N entries at
+    # the head of the dispatch topology (token-hash keyed LRU, zero-latency
+    # TierSpec — repro.core.cache).  Hits serve the stored embedding
+    # bitwise at ~zero latency / zero FLOPs; misses fall through to the
+    # policy cascade and are admitted on batch completion.  0 = no cache
+    # (baseline).
+    cache: int = 0
+    # serving: optional byte budget for the cache tier (summed embedding
+    # nbytes) on top of the entry count; 0 = entries-only bound.
+    cache_bytes: int = 0
 
 
 FLAGS = PerfFlags()

@@ -1,0 +1,381 @@
+"""Zero-cost cache tier: LRU semantics, dispatch integration, both drivers.
+
+The exact-match embedding cache (``repro.core.cache``) is a first-class
+``TierSpec`` consulted by ``QueueManager.dispatch`` before policy dispatch.
+These tests pin its contracts: LRU/byte-budget eviction, exact-match keying,
+policies never routing to it, hit-at-dispatch completion in the engine and
++0-service-time completion in the DES, admission-before-future-resolution,
+the Eq. 12 / deployment-cost repricing helpers, and — property-based — that
+serving with the cache on is bitwise-indistinguishable from serving with it
+off for ANY interleaving of repeated queries.
+"""
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model, estimator
+from repro.core.cache import (CACHE, CacheEntry, EmbeddingCache, cache_key,
+                              cache_tier)
+from repro.core.routing import (BUSY, CPU, NPU, CascadePolicy,
+                                LeastLoadedPolicy, LengthAwarePolicy,
+                                PredictivePolicy, Query, QueueManager,
+                                TierSpec, dispatchable)
+from repro.core.simulator import DeviceModel, ServingSimulator
+from repro.core.windve import Backend, ModeledBackend, WindVE
+from repro.data.workload import query_lengths, zipf_queries
+
+
+def q(qid=0, payload=None, length=75, arrival_t=0.0):
+    return Query(qid=qid, payload=payload, length=length,
+                 arrival_t=arrival_t)
+
+
+def toks(*ids):
+    return np.asarray(ids, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- cache_key
+def test_cache_key_payloadless_keys_on_length():
+    assert cache_key(q(length=75)) == cache_key(q(qid=9, length=75))
+    assert cache_key(q(length=75)) != cache_key(q(length=76))
+
+
+def test_cache_key_container_and_dtype_insensitive():
+    a = cache_key(q(payload=[3, 1, 4]))
+    b = cache_key(q(payload=np.array([3, 1, 4], np.int64)))
+    c = cache_key(q(payload=np.array([3, 1, 4], np.int16)))
+    assert a == b == c
+
+
+def test_cache_key_content_sensitive():
+    assert cache_key(q(payload=[3, 1, 4])) != cache_key(q(payload=[3, 1, 5]))
+    assert cache_key(q(payload=[3, 1])) != cache_key(q(payload=[3, 1, 0]))
+    # payload-carrying never collides with payload-less
+    assert cache_key(q(payload=[75])) != cache_key(q(length=75))
+
+
+# ---------------------------------------------------------- EmbeddingCache
+def test_lru_eviction_order_with_get_refresh():
+    c = EmbeddingCache(capacity=2)
+    c.put(q(payload=[1]), np.zeros(2))
+    c.put(q(payload=[2]), np.zeros(2))
+    assert c.get(q(payload=[1])) is not None      # refresh: [2] is now LRU
+    assert c.put(q(payload=[3]), np.zeros(2)) == 1
+    assert c.get(q(payload=[2])) is None          # evicted
+    assert c.get(q(payload=[1])) is not None
+    assert c.get(q(payload=[3])) is not None
+    assert c.evictions == 1 and len(c) == 2
+
+
+def test_byte_capacity_evicts_and_tracks_nbytes():
+    v = np.zeros(4, np.float32)                   # 16 bytes each
+    c = EmbeddingCache(capacity=100, capacity_bytes=40)
+    c.put(q(payload=[1]), v)
+    c.put(q(payload=[2]), v)
+    assert c.nbytes == 32
+    assert c.put(q(payload=[3]), v) == 1          # 48 > 40: evict oldest
+    assert c.nbytes == 32 and len(c) == 2
+    assert c.get(q(payload=[1])) is None
+
+
+def test_oversized_value_rejected_not_admitted():
+    c = EmbeddingCache(capacity=8, capacity_bytes=8)
+    c.put(q(payload=[1]), np.zeros(1, np.float32))    # 4 bytes: fits
+    assert c.put(q(payload=[2]), np.zeros(64, np.float32)) == 0
+    assert c.get(q(payload=[2])) is None
+    assert c.get(q(payload=[1])) is not None          # untouched
+
+
+def test_put_same_key_refreshes_not_duplicates():
+    c = EmbeddingCache(capacity=4)
+    c.put(q(payload=[1]), np.zeros(2), now=1.0)
+    c.put(q(payload=[1]), np.ones(2), now=2.0)
+    assert len(c) == 1 and c.inserts == 2 and c.evictions == 0
+    e = c.get(q(payload=[1]))
+    assert e.t == 2.0 and np.array_equal(e.value, np.ones(2))
+
+
+def test_stored_values_are_readonly_copies():
+    c = EmbeddingCache(capacity=4)
+    src = np.arange(4, dtype=np.float32)
+    c.put(q(payload=[1]), src)
+    src[:] = -1                                   # caller mutates its array
+    e = c.get(q(payload=[1]))
+    assert np.array_equal(e.value, np.arange(4, dtype=np.float32))
+    with pytest.raises(ValueError):
+        e.value[0] = 99                           # stored copy is immutable
+
+
+def test_clear_drops_entries_and_counters():
+    c = EmbeddingCache(capacity=2)
+    c.put(q(payload=[1]), np.zeros(2))
+    c.get(q(payload=[1]))
+    c.get(q(payload=[2]))
+    c.clear()
+    assert len(c) == 0 and c.nbytes == 0
+    assert c.hits == c.misses == c.inserts == c.evictions == 0
+
+
+def test_cache_validation_errors():
+    with pytest.raises(ValueError):
+        EmbeddingCache(capacity=0)
+    with pytest.raises(ValueError):
+        EmbeddingCache(capacity=4, capacity_bytes=0)
+
+
+# ----------------------------------------------------- QueueManager + cache
+def two_tier_qm(entries=8, policy=None):
+    return QueueManager([cache_tier(entries),
+                         TierSpec(NPU, 4), TierSpec(CPU, 2)], policy=policy)
+
+
+def test_dispatch_miss_falls_through_then_admit_then_hit():
+    qm = two_tier_qm()
+    q1 = q(qid=1, payload=[7, 7], arrival_t=1.0)
+    assert qm.dispatch(q1) == NPU                 # cold: miss -> policy
+    q1.done_t = 1.5
+    assert qm.admit(q1, np.full(3, 2.5)) == CACHE
+    q2 = q(qid=2, payload=[7, 7], arrival_t=5.0)
+    assert qm.dispatch(q2) == CACHE               # exact-match hit
+    assert np.array_equal(q2.emb, np.full(3, 2.5))
+    s = qm.stats
+    assert dict(s.cache_hits) == {CACHE: 1}
+    assert dict(s.cache_misses) == {CACHE: 1}
+    assert dict(s.cache_inserts) == {CACHE: 1}
+    assert s.cache_hit_rate() == 0.5
+    assert s.cache_staleness(50) == pytest.approx(3.5)   # 5.0 - 1.5
+    assert s.dispatched[CACHE] == 1 and s.dispatched[NPU] == 1
+    assert "cache_hit_rate" in s.summary()
+
+
+def test_cache_tier_holds_no_queue_or_concurrency():
+    qm = two_tier_qm()
+    assert CACHE not in qm.queues
+    assert qm.depth(CACHE) == 0
+    assert qm.max_concurrency == 6                # 4 + 2, cache adds none
+    assert qm.is_cache_tier(CACHE) and not qm.is_cache_tier(NPU)
+    assert [t.name for t in dispatchable(qm.tiers)] == [NPU, CPU]
+
+
+def test_reset_clears_cache_state():
+    qm = two_tier_qm()
+    q1 = q(qid=1, payload=[3])
+    qm.dispatch(q1)
+    qm.admit(q1, np.zeros(2))
+    qm.reset()
+    assert qm.dispatch(q(qid=2, payload=[3])) == NPU   # cold again
+    assert dict(qm.stats.cache_hits) == {}
+
+
+def test_topology_of_only_cache_tiers_rejected():
+    with pytest.raises(ValueError, match="non-cache"):
+        QueueManager([cache_tier(8)])
+
+
+def test_admit_without_cache_tier_is_noop():
+    qm = QueueManager([TierSpec(NPU, 4)])
+    q1 = q(qid=1, payload=[3])
+    qm.dispatch(q1)
+    assert qm.admit(q1, np.zeros(2)) is None
+    assert "cache_hit_rate" not in qm.stats.summary()
+
+
+@pytest.mark.parametrize("policy", [
+    CascadePolicy(), LengthAwarePolicy(long_threshold=50),
+    LeastLoadedPolicy(),
+    PredictivePolicy(fits={NPU: DeviceModel(NPU, beta=0.1, b=0.0, a=0.0),
+                           CPU: DeviceModel(CPU, beta=0.2, b=0.0, a=0.0)}),
+])
+def test_every_policy_skips_cache_tiers(policy):
+    qm = two_tier_qm(policy=policy)
+    tiers = qm.tiers
+    for ln in (10, 400):
+        names = list(policy.candidates(q(length=ln), tiers, qm))
+        assert CACHE not in names and names
+    # and dispatch on a cold cache routes to a real tier
+    assert qm.dispatch(q(qid=1, payload=[1], length=400)) in (NPU, CPU)
+
+
+def test_length_aware_fast_tiers_count_real_tiers_only():
+    # fast_tiers=1 must mean "first REAL tier", not the cache head
+    qm = two_tier_qm(policy=LengthAwarePolicy(long_threshold=50,
+                                              fast_tiers=1))
+    short = list(qm.policy.candidates(q(length=10), qm.tiers, qm))
+    long_ = list(qm.policy.candidates(q(length=100), qm.tiers, qm))
+    assert short == [NPU, CPU]      # short queries may use every tier
+    assert long_ == [NPU]           # long ones fit only the fast tier
+
+
+# ------------------------------------------------------------------- DES
+def des(entries=64, depth=4, slo=100.0):
+    dev = DeviceModel("npu", beta=0.05, b=0.01, a=0.0)
+    tiers = [TierSpec(NPU, depth, model=dev, max_batch=depth)]
+    if entries:
+        tiers.insert(0, cache_tier(entries))
+    return ServingSimulator(tiers=tiers, slo_s=slo)
+
+
+def test_des_repeat_after_completion_hits_at_zero_service_time():
+    sim = des()
+    res = sim.run([(0.0, 75, 1), (0.0, 75, 1), (5.0, 75, 1), (5.0, 80, 2)])
+    # the two t=0 arrivals both miss (insertion happens at completion);
+    # the t=5 repeat of key 1 hits, key 2 misses
+    assert dict(res.cache_hits) == {CACHE: 1}
+    assert res.cache_misses[CACHE] == 3
+    assert res.dispatched[CACHE] == 1
+    assert res.n_completed == 4 and res.rejected == 0
+    hit = [l for l in res.latencies if l == 0.0]
+    assert len(hit) == 1                        # the hit completed at +0
+
+
+def test_des_seeded_runs_replay_identically():
+    arrivals = [(i * 0.01, 75, i % 5) for i in range(60)]
+    a = des().run(arrivals).summary()
+    b = des().run(arrivals).summary()
+    assert a == b and a["cache_hit_rate"] > 0
+
+
+def test_des_cache_raises_accepted_concurrency_at_identical_load():
+    arrivals = [(i * 0.02, 75, i % 6) for i in range(200)]
+    off = des(entries=0).run(arrivals)
+    on = des(entries=64).run(arrivals)
+    assert on.rejected < off.rejected
+    assert on.accepted > off.accepted
+    assert "cache_hit_rate" not in off.summary()    # cache-less: unchanged
+
+
+# ---------------------------------------------------------------- engine
+class TokenSumBackend(Backend):
+    """Deterministic pure function of the payload — embeddings are checkable
+    bitwise without jax, and any cache corruption shows immediately."""
+    name = "token-sum"
+
+    def embed_batch(self, queries):
+        out = []
+        for qq in queries:
+            p = np.zeros(4, np.float64) if qq.payload is None else \
+                np.asarray(qq.payload, np.float64)
+            h = np.array([p.sum(), p.prod(), len(p), qq.length], np.float64)
+            out.append(h)
+        return out
+
+
+def engine(entries):
+    tiers = [TierSpec(CPU, 64, backend=TokenSumBackend())]
+    if entries:
+        tiers.insert(0, cache_tier(entries))
+    return WindVE(tiers=tiers)
+
+
+def test_engine_hit_resolves_immediately_and_bitwise():
+    ve = engine(entries=8)
+    try:
+        r1 = ve.submit(payload=np.array([2, 3, 4])).result(timeout=30)
+        r2 = ve.submit(payload=np.array([2, 3, 4])).result(timeout=30)
+        assert np.array_equal(r1, r2)
+        assert dict(ve.stats.cache_hits) == {CACHE: 1}
+        assert ve.stats.dispatched[CACHE] == 1
+        assert ve.stats.summary()["cache_hit_rate"] == 0.5
+    finally:
+        ve.shutdown()
+
+
+def test_engine_admits_before_resolving_future():
+    # the determinism linchpin: any client that HAS a result must get a
+    # cache hit for the same tokens on its very next submission
+    ve = engine(entries=8)
+    try:
+        for k in range(6):
+            ve.submit(payload=np.array([k])).result(timeout=30)
+            ve.submit(payload=np.array([k])).result(timeout=30)
+        assert ve.stats.cache_hits[CACHE] == 6
+    finally:
+        ve.shutdown()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=4),
+                min_size=1, max_size=24))
+def test_property_cache_on_serving_is_bitwise_identical(key_seq):
+    """For ANY interleaving of repeated queries, cache-on serving returns
+    exactly the bytes cache-off serving computes."""
+    pool = {k: np.arange(3 + k) + 10 * k for k in range(5)}
+    payloads = [pool[k] for k in key_seq]
+    results = {}
+    for entries in (0, 16):
+        ve = engine(entries)
+        try:
+            results[entries] = [
+                np.asarray(ve.submit(payload=p, length=len(p))
+                           .result(timeout=30)) for p in payloads]
+            if entries:
+                srv = ve.stats
+                assert srv.cache_hits[CACHE] + srv.cache_misses[CACHE] \
+                    == len(payloads)
+        finally:
+            ve.shutdown()
+    for off, on in zip(results[0], results[16]):
+        assert off.dtype == on.dtype and np.array_equal(off, on)
+
+
+# ------------------------------------------------- Eq.12 / cost repricing
+def test_cached_fit_scales_alpha_only():
+    fit = estimator.LatencyFit(alpha=0.2, beta=1.0, r2=0.99)
+    f2 = estimator.cached_fit(fit, 0.75)
+    assert f2.alpha == pytest.approx(0.05)
+    assert f2.beta == 1.0 and f2.r2 == 0.99
+    assert estimator.cached_fit(fit, 0.0).alpha == fit.alpha
+    for bad in (-0.1, 1.0, 1.5):
+        with pytest.raises(ValueError):
+            estimator.cached_fit(fit, bad)
+
+
+def test_cache_uplift_and_cached_depth():
+    assert cost_model.cache_uplift(0.0) == 1.0
+    assert cost_model.cache_uplift(0.5) == pytest.approx(2.0)
+    assert cost_model.cached_depth(10, 0.5) == 20
+    assert cost_model.cached_depth(7, 0.0) == 7
+    assert cost_model.cached_depth(0, 0.9) == 0
+    for bad in (-0.1, 1.0):
+        with pytest.raises(ValueError):
+            cost_model.cache_uplift(bad)
+    with pytest.raises(ValueError):
+        cost_model.cached_depth(-1, 0.5)
+
+
+# --------------------------------------------------------------- workload
+def test_zipf_queries_deterministic_and_skewed():
+    a = zipf_queries(200, 1000, alpha=1.1, unique=16, seed=3)
+    b = zipf_queries(200, 1000, alpha=1.1, unique=16, seed=3)
+    assert len(a) == 200
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    distinct = {p.tobytes() for p in a}
+    assert len(distinct) <= 16
+    # rank-1 key dominates: repeat rate far above uniform draws
+    assert 1.0 - len(distinct) / 200 >= 0.5
+    assert all(p.max() < 1000 and p.min() >= 0 for p in a)
+
+
+def test_zipf_queries_alpha_zero_is_uniform_pool_draws():
+    a = zipf_queries(64, 500, alpha=0.0, unique=8, seed=0, length=20)
+    assert all(len(p) == 20 for p in a)
+    assert len({p.tobytes() for p in a}) <= 8
+
+
+def test_zipf_queries_validation():
+    with pytest.raises(ValueError):
+        zipf_queries(-1, 100)
+    with pytest.raises(ValueError):
+        zipf_queries(10, 100, unique=0)
+    with pytest.raises(ValueError):
+        zipf_queries(10, 100, alpha=-0.5)
+
+
+def test_query_lengths_jitter_clamped_symmetric():
+    ls = query_lengths(2000, mean=75, jitter=200.0, seed=1)
+    assert min(ls) >= 1 and max(ls) <= 2 * 75 - 1
+    assert query_lengths(50, mean=75, jitter=30.0, seed=9) == \
+        query_lengths(50, mean=75, jitter=30.0, seed=9)

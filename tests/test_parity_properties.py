@@ -25,7 +25,10 @@ from collections import defaultdict
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import numpy as np
+
 from repro.core.bucketing import length_bucket_fn
+from repro.core.cache import CACHE, cache_tier
 from repro.core.routing import (CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, PredictivePolicy,
                                 TierSpec)
@@ -210,3 +213,65 @@ def test_bucketed_batches_single_bucket_both_drivers(policy_kind, lengths):
     for batch in batches:
         assert len({BUCKET(q) for q in batch}) == 1, \
             [(q.qid, q.length) for q in batch]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["cascade", "least-loaded", "predictive"]),
+       st.lists(st.integers(min_value=0, max_value=5),     # phase-1 keys
+                min_size=1, max_size=10),
+       st.lists(st.integers(min_value=0, max_value=5),     # phase-2 keys
+                min_size=1, max_size=10))
+def test_cache_tier_hit_miss_parity(policy_kind, keys1, keys2):
+    """With a cache tier at the head of the topology, both drivers must
+    agree exactly on per-tier hit/miss/insert counts for two-phase traffic:
+    a pinned burst (all arrivals before any completion — every lookup
+    misses, every completion admits), then, after the backlog fully drains,
+    a second pinned burst whose hits are exactly the phase-1 key set.
+    Admission happens BEFORE the future resolves in the engine, so the
+    drained-backlog guarantee is identical under monotonic and sim time."""
+    LEN = 64
+    models = base_models(2, 1)
+
+    def specs(mk):
+        return [cache_tier(64)] + [mk(i) for i in range(2)]
+
+    sim = ServingSimulator(
+        tiers=specs(lambda i: TierSpec(f"T{i}", 8, model=models[f"T{i}"])),
+        slo_s=100.0, policy=make_policy(policy_kind, models))
+    arrivals = [(0.0, LEN, k) for k in keys1] + \
+               [(1000.0, LEN, k) for k in keys2]    # far past phase-1 drain
+    res = sim.run(arrivals)
+
+    ve = WindVE(
+        tiers=specs(lambda i: TierSpec(
+            f"T{i}", 8,
+            backend=ModeledBackend(DeviceModel(f"T{i}", beta=TIER_BETAS[i],
+                                               b=0.0, a=0.0), embed_dim=4))),
+        policy=make_policy(policy_kind, models))
+    old = sys.getswitchinterval()
+    try:
+        for phase in (keys1, keys2):        # drain fully between phases
+            sys.setswitchinterval(5.0)
+            try:
+                futs = [ve.submit(payload=np.array([k], np.int64),
+                                  length=LEN) for k in phase]
+            finally:
+                sys.setswitchinterval(old)
+            for f in futs:
+                if f is not None:
+                    f.result(timeout=60)
+    finally:
+        sys.setswitchinterval(old)
+        ve.shutdown()
+
+    e, s = ve.stats, res
+    assert dict(e.cache_hits) == dict(s.cache_hits), (keys1, keys2)
+    assert dict(e.cache_misses) == dict(s.cache_misses)
+    assert dict(e.cache_inserts) == dict(s.cache_inserts)
+    assert dict(e.dispatched) == dict(s.dispatched)
+    assert e.rejected == s.rejected == 0      # 2x depth 8 >= 10-query burst
+    # the hits are exactly the phase-2 keys already admitted in phase 1
+    expect_hits = sum(1 for k in keys2 if k in set(keys1))
+    assert e.cache_hits.get(CACHE, 0) == expect_hits
+    assert e.summary().get("cache_hit_rate") == \
+        s.summary().get("cache_hit_rate")
