@@ -1,0 +1,258 @@
+"""Chaos test: serve THROUGH a mid-run tier failure, on both drivers.
+
+WindVE's deployment-cost story (Eq. 12) assumes every provisioned tier
+keeps serving; this bench injects the opposite — the primary tier goes DOWN
+for a wall-clock window in the middle of a paced query stream — and asserts
+the fault-tolerance layer turns that outage into failover, not into hung or
+wrong answers:
+
+* engine — two REAL ``JaxEmbedderBackend`` tiers sharing one set of
+  weights; the primary is wrapped in ``FaultyBackend`` with a down window.
+  Its circuit breaker must trip (failures stop hammering the dead tier),
+  retried queries must fail over to the healthy tier, and >= 99% of
+  accepted, in-deadline queries must serve embeddings that match a
+  fault-free golden run (cosine >= 0.999 — loaded once, never re-minted
+  mid-assert).  After the window the half-open probe must RE-CLOSE the
+  breaker (recovery, measured as time from window end to re-close);
+* DES — the same topology shape, fault window, breaker, and retry policy
+  on simulated time via ``FaultModel``.  The DES-measured
+  served-through-failure fraction must reproduce the engine's within a
+  factor band — that is what makes the simulator a trustworthy sizing tool
+  for clusters that fail (ROADMAP item 3 under faults).
+
+Self-asserting (CI runs ``--smoke``; a raise exits non-zero) and emits
+machine-readable ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import Row, emit, write_bench_json
+from repro.core.faults import FaultModel, FaultSchedule, FaultyBackend
+from repro.core.health import CLOSED, CircuitBreaker
+from repro.core.routing import CPU, NPU, Query, RetryPolicy, TierSpec
+from repro.core.simulator import DeviceModel, ServingSimulator
+from repro.core.windve import JaxEmbedderBackend, WindVE
+
+MAX_TOKENS = 48
+QUERY_LEN = 32
+DOWN = (0.7, 1.6)          # the primary tier's outage window (seconds)
+GAP_S = 0.03               # paced arrivals: one query per 30 ms
+BREAKER_KW = dict(failure_threshold=2, cooldown_s=0.25)
+RETRY = RetryPolicy(max_retries=4, backoff_s=0.005)
+DEADLINE_S = 8.0
+
+
+def cosine(a: np.ndarray, b: np.ndarray) -> float:
+    a, b = np.asarray(a, np.float64).ravel(), np.asarray(b, np.float64).ravel()
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    return float(a @ b / (na * nb)) if na and nb else 0.0
+
+
+def engine_leg(cfg, params, payloads: List[np.ndarray], golden):
+    """Paced open-loop serve with the primary tier failing mid-run."""
+    primary = FaultyBackend(
+        JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS),
+        schedule=FaultSchedule((DOWN,)))
+    fallback = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+    # warm every (trace) batch size the run can produce BEFORE the clock
+    # starts: a mid-run jit retrace would stretch the outage window
+    for be in (primary.inner, fallback):
+        for bs in (1, 2, 3, 4):
+            be.embed_batch([Query(qid=0, payload=payloads[0],
+                                  length=QUERY_LEN)] * bs)
+    breaker = CircuitBreaker(**BREAKER_KW)
+    tiers = [TierSpec(NPU, 4, backend=primary, max_batch=4, breaker=breaker),
+             TierSpec(CPU, 8, backend=fallback, max_batch=4,
+                      breaker=CircuitBreaker(**BREAKER_KW))]
+    ve = WindVE(tiers=tiers, retry=RETRY, default_deadline_s=DEADLINE_S)
+    try:
+        primary.elapsed()                    # pin the fault clock to t0
+        t0 = time.monotonic()
+        futs, sub_t = [], []
+        done_t: Dict[int, float] = {}
+        reclose_t: Optional[float] = None
+        for p in payloads:
+            target = t0 + len(futs) * GAP_S
+            time.sleep(max(0.0, target - time.monotonic()))
+            i = len(futs)
+            sub_t.append(time.monotonic() - t0)
+            f = ve.submit(payload=p, length=QUERY_LEN)
+            if f is not None:
+                f.add_done_callback(
+                    lambda _f, i=i: done_t.setdefault(
+                        i, time.monotonic() - t0))
+            futs.append(f)
+            if reclose_t is None and sub_t[-1] > DOWN[1] \
+                    and breaker.state == CLOSED:
+                reclose_t = sub_t[-1]
+        served: Dict[int, np.ndarray] = {}
+        failures = 0
+        for i, f in enumerate(futs):
+            if f is None:
+                continue                     # BUSY — never accepted
+            try:
+                served[i] = np.asarray(f.result(timeout=60))
+            except Exception:
+                failures += 1
+        stats = ve.stats
+        # snapshot the paced run's counters BEFORE the recovery poll below
+        # adds probe traffic of its own.  Client-level accepted = futures
+        # handed out (Telemetry.accepted counts per-tier admissions, which
+        # re-count every retry re-dispatch)
+        accepted = sum(1 for f in futs if f is not None)
+        misses = sum(stats.deadline_misses.values())
+        backend_errors = sum(stats.backend_errors.values())
+        retries = sum(stats.retries.values())
+        # the breaker may re-close only after the last submit: probe it
+        poll_deadline = time.monotonic() + 5.0
+        while reclose_t is None and time.monotonic() < poll_deadline:
+            f = ve.submit(payload=payloads[0], length=QUERY_LEN)
+            if f is not None:
+                try:
+                    f.result(timeout=10)
+                except Exception:
+                    pass
+            if breaker.state == CLOSED:
+                reclose_t = time.monotonic() - t0
+            time.sleep(0.02)
+        ok = sum(1 for i, e in served.items()
+                 if cosine(e, golden[payloads[i].tobytes()]) >= 0.999)
+        during = [i for i, s in enumerate(sub_t)
+                  if DOWN[0] <= s <= DOWN[1] and i in served and i in done_t]
+        failover_lats = [done_t[i] - sub_t[i] for i in during]
+        return {
+            "accepted": accepted,
+            "served": len(served),
+            "served_ok": ok,
+            "failed": failures,
+            "deadline_misses": misses,
+            "trips": sum(stats.breaker_trips.values()),
+            "recoveries": sum(stats.breaker_recoveries.values()),
+            "backend_errors": backend_errors,
+            "retries": retries,
+            "breaker_state": breaker.state,
+            "recovery_s": (reclose_t - DOWN[1]) if reclose_t else float("nan"),
+            "n_during": len(during),
+            "failover_p95_s": float(np.percentile(failover_lats, 95))
+            if failover_lats else float("nan"),
+        }
+    finally:
+        ve.shutdown()
+
+
+def des_leg(n: int):
+    """Same topology shape / fault window / breaker / retry on sim time."""
+    fast = DeviceModel("npu", beta=0.004, b=0.001, a=0.0)
+    slow = DeviceModel("cpu", beta=0.008, b=0.002, a=0.0)
+    tiers = [TierSpec(NPU, 4, model=fast, max_batch=4,
+                      breaker=CircuitBreaker(**BREAKER_KW)),
+             TierSpec(CPU, 8, model=slow, max_batch=4,
+                      breaker=CircuitBreaker(**BREAKER_KW))]
+    sim = ServingSimulator(tiers=tiers, slo_s=1.0, retry=RETRY,
+                           deadline_s=DEADLINE_S,
+                           faults={NPU: FaultModel(
+                               schedule=FaultSchedule((DOWN,)),
+                               fail_latency_s=0.001)})
+    res = sim.run([(i * GAP_S, QUERY_LEN) for i in range(n)])
+    return res, [t.breaker.state for t in tiers]
+
+
+def run(smoke: bool = False) -> list[Row]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import embedder
+    from repro.data.workload import make_queries
+
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+
+    n = 72 if smoke else 120
+    payloads = make_queries(n, cfg.vocab_size, length=QUERY_LEN, seed=3)
+    rows: list[Row] = []
+
+    # ---- golden embeddings: ONE fault-free pass, loaded (dict lookups)
+    # below, never re-minted while asserting ------------------------------
+    oracle = JaxEmbedderBackend(cfg, params, max_tokens=MAX_TOKENS)
+    golden = {}
+    for i, p in enumerate(payloads):
+        [emb] = oracle.embed_batch([Query(qid=i, payload=p,
+                                          length=QUERY_LEN)])
+        golden[p.tobytes()] = np.asarray(emb)
+
+    # ---- engine: serve through the outage -------------------------------
+    eng = engine_leg(cfg, params, list(payloads), golden)
+    in_deadline = eng["accepted"] - eng["deadline_misses"]
+    eng_frac = eng["served_ok"] / max(1, in_deadline)
+    rows.append(("chaos/engine-served", 0.0,
+                 f"accepted={eng['accepted']} served_ok={eng['served_ok']} "
+                 f"failed={eng['failed']} misses={eng['deadline_misses']} "
+                 f"frac={eng_frac:.3f} (>=0.99 required)"))
+    rows.append(("chaos/engine-failover", eng["failover_p95_s"] * 1e6,
+                 f"p95 e2e through outage; {eng['n_during']} arrivals "
+                 f"during the {DOWN} window, retries={eng['retries']} "
+                 f"backend_errors={eng['backend_errors']}"))
+    rows.append(("chaos/engine-breaker", 0.0,
+                 f"trips={eng['trips']} recoveries={eng['recoveries']} "
+                 f"final={eng['breaker_state']} "
+                 f"recovery={eng['recovery_s']:.2f}s after window end"))
+
+    # ---- DES: the same outage on simulated time -------------------------
+    res, states = des_leg(n)
+    # client-level accepted, like the engine leg: arrivals minus BUSY
+    # (Telemetry.accepted re-counts retry re-dispatches)
+    des_in_deadline = n - res.rejected - sum(res.deadline_misses.values())
+    des_frac = res.n_completed / max(1, des_in_deadline)
+    ratio = eng_frac / max(des_frac, 1e-9)
+    rows.append(("chaos/des-served", 0.0,
+                 f"accepted={n - res.rejected} completed={res.n_completed} "
+                 f"failed={res.failed} frac={des_frac:.3f} "
+                 f"trips={sum(res.breaker_trips.values())} "
+                 f"recoveries={sum(res.breaker_recoveries.values())}"))
+    rows.append(("chaos/parity", 0.0,
+                 f"engine/des served-through-failure ratio={ratio:.3f} "
+                 f"(must be within [0.67, 1.5])"))
+
+    write_bench_json("chaos", rows, metrics={
+        "engine_served_frac": eng_frac,
+        "engine_failover_p95_s": eng["failover_p95_s"],
+        "engine_recovery_s": eng["recovery_s"],
+        "engine_trips": eng["trips"],
+        "engine_recoveries": eng["recoveries"],
+        "engine_retries": eng["retries"],
+        "engine_backend_errors": eng["backend_errors"],
+        "des_served_frac": des_frac,
+        "des_trips": sum(res.breaker_trips.values()),
+        "des_recoveries": sum(res.breaker_recoveries.values()),
+        "served_frac_ratio": ratio,
+        "down_window_s": DOWN[1] - DOWN[0],
+    })
+
+    # regression guards — benchmarks.run turns a raise into exit code 1
+    assert eng["backend_errors"] > 0, \
+        "the outage window injected no failures: the chaos run proved nothing"
+    assert eng_frac >= 0.99, \
+        f"only {eng_frac:.1%} of in-deadline queries served golden-parity " \
+        f"embeddings through the outage (>=99% required)"
+    assert eng["trips"] >= 1, "the primary tier's breaker never tripped"
+    assert eng["recoveries"] >= 1 and eng["breaker_state"] == CLOSED, \
+        f"breaker did not re-close after recovery " \
+        f"(state={eng['breaker_state']}, recoveries={eng['recoveries']})"
+    assert sum(res.breaker_trips.values()) >= 1, \
+        "the DES fault model never tripped the breaker"
+    assert 0.67 <= ratio <= 1.5, \
+        f"DES does not reproduce the engine served-through-failure " \
+        f"fraction: engine={eng_frac:.3f} des={des_frac:.3f} ratio={ratio:.2f}"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast run (CI)")
+    args = ap.parse_args()
+    emit(run(smoke=args.smoke))

@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.sharded_embed_microbench",  # device mesh fan-out + bf16
     "benchmarks.quant_embed_microbench",    # int8 weight-only CPU tier
     "benchmarks.cache_microbench",  # zero-cost exact-match cache tier
+    "benchmarks.chaos_microbench",  # fault tolerance: serve through outage
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 

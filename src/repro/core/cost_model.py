@@ -116,6 +116,41 @@ def cached_depth(depth: int, hit_rate: float) -> int:
     return math.floor(depth * cache_uplift(hit_rate) + 1e-9)
 
 
+def availability(mttf_s: float, mttr_s: float) -> float:
+    """Steady-state availability of a repairable tier: MTTF/(MTTF+MTTR) —
+    the up fraction of the alternating-renewal process
+    ``faults.FaultSchedule.from_mttf`` draws its down windows from."""
+    if mttf_s <= 0 or mttr_s <= 0:
+        raise ValueError("mttf_s and mttr_s must be positive")
+    return mttf_s / (mttf_s + mttr_s)
+
+
+def degraded_capacity(depths: "dict[str, int]",
+                      down: "Iterable[str]" = ()) -> int:
+    """System max concurrency with the named tiers tripped/failed: the sum
+    of C^max over the tiers dispatch can still reach — the closed form of
+    ``QueueManager.degraded_max_concurrency`` while breakers are open.
+    The paper's Eq. 6 peak-provisioned cost divides by THIS during an
+    outage, not by the fault-free total."""
+    unknown = set(down) - set(depths)
+    if unknown:
+        raise ValueError(f"unknown tier(s) {sorted(unknown)}; "
+                         f"have {sorted(depths)}")
+    return sum(d for name, d in depths.items() if name not in down)
+
+
+def expected_capacity(depths: "dict[str, int]",
+                      avail: "dict[str, float]") -> float:
+    """Long-run expected max concurrency of a topology whose tiers fail
+    independently with per-tier availability ``avail`` (missing tiers
+    count as always-up): sum_t A_t * C^max_t.  What a fault-aware sizing
+    pass should provision against instead of the fault-free sum."""
+    for name, a in avail.items():
+        if not 0.0 <= a <= 1.0:
+            raise ValueError(f"availability[{name!r}] must be in [0, 1]")
+    return sum(d * avail.get(name, 1.0) for name, d in depths.items())
+
+
 def concurrency_uplift_bound(alpha_npu: float, alpha_cpu: float) -> float:
     """Ineq. 19: C_CPU/C_NPU < alpha_NPU/alpha_CPU — the uplift is bounded by
     the device performance-gap ratio."""

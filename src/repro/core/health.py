@@ -1,0 +1,157 @@
+"""Per-tier health state: a deterministic, clock-free circuit breaker.
+
+WindVE's deployment-cost argument (Eq. 12) assumes every provisioned tier
+keeps serving; production traffic guarantees the opposite.  A tier whose
+backend has started failing (crashed worker pool, stalled device, network
+partition to a remote mesh) must be *routed around*, not hammered: every
+query dispatched into a dead tier's queue is a client future that either
+burns a retry attempt or times out against its deadline.
+
+``CircuitBreaker`` is the standard three-state machine, shaped for the
+shared scheduling core:
+
+* **closed** — healthy.  Consecutive backend failures (``record_failure``)
+  and a service-latency EWMA crossing ``latency_trip_s`` (a *stall* is a
+  failure that never raises) both count toward a trip.
+* **open** — tripped.  :func:`repro.core.routing.dispatchable` filters the
+  tier out, so all four dispatch policies transparently route around it
+  (exactly like cache tiers are filtered — the topology list is unchanged,
+  only the candidate set shrinks).  Queries already queued on the tier are
+  still drained by its workers: the breaker gates *admission*, not drain.
+* **half-open** — after ``cooldown_s`` the tier becomes dispatchable again
+  and the next completed batch is the probe: success closes the breaker
+  (recovery), failure re-opens it for another cooldown.
+
+Determinism contract (same as the cache tier): the breaker never reads a
+wall clock.  Callers pass ``now`` — the threaded engine passes
+``time.monotonic()``, the DES passes simulated time — and the internal
+clock is monotone (``max`` of everything seen), so a seeded DES run replays
+the identical trip/recover sequence.  Thread-safe for the engine.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half-open"
+
+
+class CircuitBreaker:
+    """Trip on consecutive failures or a latency-EWMA stall; recover via a
+    half-open probe.  Attach one per device tier (``TierSpec.breaker``)."""
+
+    def __init__(self, failure_threshold: int = 3, cooldown_s: float = 1.0,
+                 latency_trip_s: Optional[float] = None,
+                 ewma_alpha: float = 0.3):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if cooldown_s <= 0:
+            raise ValueError("cooldown_s must be positive")
+        if latency_trip_s is not None and latency_trip_s <= 0:
+            raise ValueError("latency_trip_s must be positive when set")
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        self.failure_threshold = failure_threshold
+        self.cooldown_s = cooldown_s
+        self.latency_trip_s = latency_trip_s
+        self.ewma_alpha = ewma_alpha
+        self._lock = threading.Lock()
+        self._init_state()
+
+    def _init_state(self) -> None:
+        self.state = CLOSED
+        self.consecutive_failures = 0
+        self.latency_ewma_s: Optional[float] = None
+        self.trips = 0
+        self.recoveries = 0
+        self.last_trip_reason: Optional[str] = None
+        self._open_until = 0.0
+        self._now = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def dispatchable(self) -> bool:
+        """May new work be routed here?  Open == no; half-open == yes (the
+        probe); callers must ``tick(now)`` first so open -> half-open
+        transitions happen on the driver's clock, not a hidden one."""
+        with self._lock:
+            return self.state != OPEN
+
+    def tick(self, now: float) -> str:
+        """Advance the breaker's clock (monotone).  An open breaker whose
+        cooldown has elapsed transitions to half-open — the next dispatch
+        becomes the recovery probe.  Returns the post-tick state."""
+        with self._lock:
+            self._now = max(self._now, now)
+            if self.state == OPEN and self._now >= self._open_until:
+                self.state = HALF_OPEN
+            return self.state
+
+    def _trip(self, reason: str) -> None:
+        self.state = OPEN
+        self.trips += 1
+        self.last_trip_reason = reason
+        self.consecutive_failures = 0
+        self._open_until = self._now + self.cooldown_s
+
+    def record_success(self, latency_s: float, now: float) -> None:
+        """One completed batch.  Resets the failure streak; in half-open
+        this is the probe succeeding (recovery).  A closed breaker with
+        ``latency_trip_s`` set trips when the latency EWMA crosses it —
+        the tier is *stalling*, which a raise-based detector never sees."""
+        with self._lock:
+            self._now = max(self._now, now)
+            self.consecutive_failures = 0
+            if self.state == HALF_OPEN:
+                self.state = CLOSED
+                self.recoveries += 1
+                # the stale pre-trip EWMA must not instantly re-trip a
+                # freshly recovered tier: restart it from the probe
+                self.latency_ewma_s = float(latency_s)
+                return
+            a = self.ewma_alpha
+            self.latency_ewma_s = float(latency_s) if \
+                self.latency_ewma_s is None else \
+                a * float(latency_s) + (1.0 - a) * self.latency_ewma_s
+            if (self.state == CLOSED and self.latency_trip_s is not None
+                    and self.latency_ewma_s > self.latency_trip_s):
+                self._trip("latency")
+
+    def record_failure(self, now: float) -> None:
+        """One failed batch.  Half-open: the probe failed — re-open for
+        another cooldown.  Closed: count toward the consecutive-failure
+        threshold.  Open (in-flight work finishing after the trip): extend
+        the cooldown from ``now``."""
+        with self._lock:
+            self._now = max(self._now, now)
+            if self.state == HALF_OPEN:
+                self._trip("probe-failure")
+            elif self.state == OPEN:
+                self._open_until = max(self._open_until,
+                                       self._now + self.cooldown_s)
+            else:
+                self.consecutive_failures += 1
+                if self.consecutive_failures >= self.failure_threshold:
+                    self._trip("failures")
+
+    def reset(self) -> None:
+        """Fresh closed breaker (counters included) — one DES run's state."""
+        with self._lock:
+            self._init_state()
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "state": self.state,
+                "consecutive_failures": self.consecutive_failures,
+                "latency_ewma_s": self.latency_ewma_s,
+                "trips": self.trips,
+                "recoveries": self.recoveries,
+                "last_trip_reason": self.last_trip_reason,
+            }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"CircuitBreaker(state={self.state!r}, trips={self.trips}, "
+                f"recoveries={self.recoveries})")

@@ -34,11 +34,86 @@ from dataclasses import dataclass
 from typing import (Any, Callable, Deque, Dict, Iterable, List, Optional,
                     Sequence, Union)
 
+from repro.core.health import CLOSED as BREAKER_CLOSED
+from repro.core.health import OPEN as BREAKER_OPEN
 from repro.core.telemetry import Telemetry
 
 NPU = "NPU"
 CPU = "CPU"
 BUSY = "BUSY"
+# dispatch verdict for a query already past its deadline on arrival (or on a
+# retry re-dispatch): it never enters a queue and never reaches a device
+EXPIRED = "EXPIRED"
+# pseudo-tier key for deadline misses detected at dispatch time (the query
+# was never queued on any tier, so no tier owns the miss)
+ARRIVAL = "arrival"
+
+
+class ServeError(RuntimeError):
+    """Structured terminal serving failure — what a client future carries
+    instead of a raw backend traceback.
+
+    ``kind``: ``"backend_error"`` (every retry attempt failed),
+    ``"deadline"`` (see :class:`DeadlineExceeded`), ``"worker_death"`` (the
+    tier's last worker thread died with this query stranded in its queue),
+    ``"no_capacity"`` (re-dispatch after a failure found every surviving
+    tier full).  ``attempts`` is how many re-dispatches were burned and
+    ``cause`` the last underlying exception (None for deadline misses).
+    """
+
+    def __init__(self, kind: str, tier: Optional[str] = None,
+                 qid: Optional[int] = None, attempts: int = 0,
+                 cause: Optional[BaseException] = None):
+        self.kind = kind
+        self.tier = tier
+        self.qid = qid
+        self.attempts = attempts
+        self.cause = cause
+        msg = f"{kind} (tier={tier}, qid={qid}, attempts={attempts})"
+        if cause is not None:
+            msg += f": {cause!r}"
+        super().__init__(msg)
+
+
+class DeadlineExceeded(ServeError):
+    """The query's absolute deadline passed before it could be served —
+    while queued (the sweep expired it), at dispatch (it arrived dead), or
+    between retry attempts."""
+
+    def __init__(self, tier: Optional[str] = None, qid: Optional[int] = None,
+                 attempts: int = 0):
+        super().__init__("deadline", tier=tier, qid=qid, attempts=attempts)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded re-dispatch of queries from a failed batch.
+
+    A failed batch's queries go back through ``QueueManager.dispatch`` (the
+    normal policy path — so survivors route to whatever healthy tier the
+    policy picks), each re-dispatch burning one of ``max_retries`` attempts
+    carried on ``Query.attempts``.  ``backoff(attempt)`` is the exponential
+    pause before attempt N (1-based): ``backoff_s * backoff_factor**(N-1)``
+    — the DES prices it as simulated delay, the engine sleeps it in the
+    failed tier's worker (the tier that just failed is the one that waits).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError("backoff_factor must be >= 1")
+
+    def backoff(self, attempt: int) -> float:
+        if attempt < 1:
+            raise ValueError("attempt is 1-based")
+        return self.backoff_s * self.backoff_factor ** (attempt - 1)
 
 
 @dataclass
@@ -52,10 +127,20 @@ class Query:
     start_t: float = 0.0
     done_t: float = 0.0
     emb: Any = None              # filled by a cache-tier hit at dispatch
+    # fault tolerance: absolute deadline on the driver's clock (monotonic /
+    # sim time; None = no deadline) and the retry attempts burned so far
+    deadline: Optional[float] = None
+    attempts: int = 0
 
     @property
     def e2e_latency(self) -> float:
         return self.done_t - self.arrival_t
+
+    def expired(self, now: float) -> bool:
+        """Dead at ``now``?  The deadline is the first dead instant
+        (``now >= deadline``), so an expiry swept exactly at the deadline
+        behaves identically whichever same-instant event runs first."""
+        return self.deadline is not None and now >= self.deadline
 
 
 class BoundedQueue:
@@ -115,6 +200,20 @@ class BoundedQueue:
             self._in_flight += len(out)
         return out
 
+    def expire(self, now: float) -> List[Query]:
+        """Remove and return every *queued* query whose deadline has passed
+        at ``now`` (in-flight work cannot be recalled).  The returned
+        queries never count as in-flight — their slots free immediately."""
+        dead: List[Query] = []
+        with self._lock:
+            if not self._q:
+                return dead
+            live: Deque[Query] = deque()
+            for q in self._q:
+                (dead if q.expired(now) else live).append(q)
+            self._q = live
+        return dead
+
     def finish(self, n: int) -> None:
         with self._lock:
             self._in_flight -= n
@@ -145,6 +244,12 @@ class TierSpec:
     embeddings back via ``QueueManager.admit``.  Cache tiers are invisible
     to ``DispatchPolicy.candidates`` (see :func:`dispatchable`): they have
     no queue depth to fill and no service curve to price.
+
+    ``breaker`` (optional, a ``repro.core.health.CircuitBreaker``) gives
+    the tier health state: the drivers feed batch outcomes through
+    ``QueueManager.tier_success`` / ``tier_failure`` and a tripped (open)
+    breaker removes the tier from :func:`dispatchable`, so every policy
+    transparently routes around it until its half-open probe recovers.
     """
 
     name: str
@@ -155,16 +260,28 @@ class TierSpec:
     workers: int = 1
     bucket_fn: Optional[Callable[[Query], Any]] = None
     cache: Any = None
+    breaker: Any = None
+
+
+def device_tiers(tiers: Sequence[TierSpec]) -> List[TierSpec]:
+    """The tiers that hold a bounded queue and a device: everything but the
+    zero-latency cache tiers.  This is the *structural* set — queues and
+    workers exist for these regardless of live health state."""
+    return [t for t in tiers if t.cache is None]
 
 
 def dispatchable(tiers: Sequence[TierSpec]) -> List[TierSpec]:
-    """The tiers a policy may route a query into: everything but the
-    zero-latency cache tiers.  A cache tier is consulted by
-    ``QueueManager.dispatch`` BEFORE the policy runs (a hit never reaches a
-    device), has no bounded queue to push into, no backlog to price and no
-    Eq. 12 service curve — so every policy ranks over this filtered list.
+    """The tiers a policy may route a query into RIGHT NOW: device tiers
+    (cache tiers are consulted by ``QueueManager.dispatch`` BEFORE the
+    policy runs — a hit never reaches a device) whose circuit breaker, if
+    any, is not open.  A tripped tier keeps its queue and workers — queued
+    work still drains, cache hits still serve — but receives no new
+    queries until its half-open probe succeeds, so every policy ranks over
+    this filtered list and degrades around failures without knowing they
+    exist.
     """
-    return [t for t in tiers if t.cache is None]
+    return [t for t in tiers if t.cache is None and
+            (t.breaker is None or t.breaker.dispatchable)]
 
 
 class DispatchPolicy:
@@ -375,12 +492,18 @@ class QueueManager:
         # hold no bounded queue (a hit never occupies a concurrency slot)
         self.cache_tiers: List[TierSpec] = [t for t in self.tiers
                                             if t.cache is not None]
-        if not dispatchable(self.tiers):
+        if not device_tiers(self.tiers):
             raise ValueError("need at least one non-cache tier")
         self.policy: DispatchPolicy = policy or CascadePolicy()
+        # queues exist per DEVICE tier, tripped or not: a breaker gates
+        # admission, never the existence of the tier's queue/workers
         self.queues: Dict[str, BoundedQueue] = {
-            t.name: BoundedQueue(t.depth) for t in dispatchable(self.tiers)}
+            t.name: BoundedQueue(t.depth) for t in device_tiers(self.tiers)}
         self.stats: Telemetry = stats if stats is not None else Telemetry()
+        # driver hook: called (outside the queue lock) for every queued
+        # query the deadline sweep expires — the engine fails its future
+        # with DeadlineExceeded; the DES needs no action beyond telemetry
+        self.on_expire: Optional[Callable[[Query], None]] = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -392,26 +515,40 @@ class QueueManager:
     def is_cache_tier(self, name: str) -> bool:
         return any(t.name == name for t in self.cache_tiers)
 
-    def dispatch(self, query: Query) -> str:
-        """Route one query.  Returns the admitting tier's name, or BUSY.
+    def dispatch(self, query: Query, now: Optional[float] = None) -> str:
+        """Route one query.  Returns the admitting tier's name, BUSY, or
+        EXPIRED (already past its deadline — it never enters a queue).
 
         Cache tiers are consulted first, in topology order: an exact-match
         hit fills ``query.emb``, counts as a dispatch to (and completion
         responsibility of) the cache tier, and never touches a device queue
         — the driver must complete the query immediately (zero service
         time).  Misses record per-tier miss telemetry and fall through to
-        normal policy dispatch.  ``query.arrival_t`` is the lookup clock, so
-        hit staleness is exact under both drivers (monotonic / sim time).
+        normal policy dispatch.  ``now`` defaults to ``query.arrival_t``
+        (the lookup clock for cache staleness and the breaker clock under
+        both drivers: monotonic / sim time); retry re-dispatch passes the
+        current clock explicitly since ``arrival_t`` is then stale.
         """
+        if now is None:
+            now = query.arrival_t
         with self._lock:
+            if query.expired(now):
+                self.stats.record_deadline_miss(ARRIVAL)
+                return EXPIRED
+            # advance every breaker's clock: open tiers whose cooldown has
+            # elapsed become half-open (dispatchable again) on THIS
+            # driver's clock, so the recovery probe is deterministic
+            for t in self.tiers:
+                if t.breaker is not None:
+                    t.breaker.tick(now)
             for ct in self.cache_tiers:
-                entry = ct.cache.get(query, now=query.arrival_t)
+                entry = ct.cache.get(query, now=now)
                 if entry is not None:
                     query.device = ct.name
                     query.emb = entry.value
                     self.stats.record_dispatch(ct.name)
                     self.stats.record_cache_hit(
-                        ct.name, max(0.0, query.arrival_t - entry.t))
+                        ct.name, max(0.0, now - entry.t))
                     return ct.name
                 self.stats.record_cache_miss(ct.name)
             for name in self.policy.candidates(query, self.tiers, self):
@@ -423,6 +560,64 @@ class QueueManager:
                     return name
             self.stats.record_busy()
             return BUSY
+
+    # -- fault-tolerance bridges (drivers -> breaker + telemetry) ----------
+    def tier_success(self, device: str, service_s: float, now: float) -> None:
+        """One completed batch on ``device``: feed the tier's breaker (if
+        any) and record a half-open probe success as a recovery."""
+        t = self.tier(device)
+        if t.breaker is None:
+            return
+        before = t.breaker.state
+        t.breaker.record_success(service_s, now)
+        after = t.breaker.state
+        if before != after:
+            if after == BREAKER_CLOSED:
+                self.stats.record_breaker_recovery(device)
+            elif after == BREAKER_OPEN:    # latency-EWMA stall trip
+                self.stats.record_breaker_trip(device)
+
+    def tier_failure(self, device: str, now: float) -> None:
+        """One failed batch on ``device``: count the backend error and feed
+        the tier's breaker; a threshold crossing records the trip."""
+        self.stats.record_backend_error(device)
+        t = self.tier(device)
+        if t.breaker is None:
+            return
+        before = t.breaker.state
+        t.breaker.record_failure(now)
+        if before != BREAKER_OPEN and t.breaker.state == BREAKER_OPEN:
+            self.stats.record_breaker_trip(device)
+
+    def sweep(self, device: str, now: float) -> List[Query]:
+        """Expire overdue *queued* queries on one tier: each is removed
+        from the queue (its slot frees immediately), counted as a
+        ``deadline_miss`` against the tier, and handed to ``on_expire`` so
+        the driver can fail its future.  The engine sweeps on every worker
+        poll; the DES sweeps at exact per-query deadline events and before
+        every batch formation — either way ``pop_batch`` never forms a
+        batch from dead work."""
+        if device not in self.queues:
+            return []
+        dead = self.queues[device].expire(now)
+        for q in dead:
+            self.stats.record_deadline_miss(device)
+            if self.on_expire is not None:
+                self.on_expire(q)
+        return dead
+
+    def tripped(self) -> List[str]:
+        """Names of tiers currently removed from dispatch by their breaker."""
+        return [t.name for t in device_tiers(self.tiers)
+                if t.breaker is not None and not t.breaker.dispatchable]
+
+    @property
+    def degraded_max_concurrency(self) -> int:
+        """sum of C^max over the tiers dispatch can reach *right now* —
+        the live capacity the SLO contract actually has while breakers are
+        open (``cost_model.degraded_capacity`` gives the closed form)."""
+        return sum(self.queues[t.name].depth for t in dispatchable(self.tiers)
+                   if t.name in self.queues)
 
     def admit(self, query: Query, value: Any = None) -> Optional[str]:
         """Admission hook: insert one computed embedding into the head
@@ -459,25 +654,33 @@ class QueueManager:
         return spec.max_batch if spec.max_batch else \
             max(1, self.queues[device].depth)
 
-    def pop_batch(self, device: str) -> List[Query]:
+    def pop_batch(self, device: str, now: Optional[float] = None
+                  ) -> List[Query]:
         """Drain one batch from a tier, honouring its ``bucket_fn``.
 
         Both drivers (threaded engine, DES) form batches through this single
-        entry point so batch composition cannot diverge between them.
+        entry point so batch composition cannot diverge between them.  With
+        ``now`` set, overdue queued queries are swept out first (see
+        :meth:`sweep`) — a batch never contains dead work.
         """
+        if now is not None:
+            self.sweep(device, now)
         return self.queues[device].pop_batch(self.max_batch(device),
                                              self.tier(device).bucket_fn)
 
     def reset(self, stats: Optional[Telemetry] = None) -> Telemetry:
-        """Fresh queues (at current depths), empty caches + fresh telemetry
-        — one DES run starts cold and deterministic."""
+        """Fresh queues (at current depths), empty caches, closed breakers
+        + fresh telemetry — one DES run starts cold and deterministic."""
         with self._lock:
             self.queues = {t.name: BoundedQueue(self.depth(t.name) if
                                                 t.name in self.queues else
                                                 t.depth)
-                           for t in dispatchable(self.tiers)}
+                           for t in device_tiers(self.tiers)}
             for ct in self.cache_tiers:
                 ct.cache.clear()
+            for t in self.tiers:
+                if t.breaker is not None:
+                    t.breaker.reset()
             self.stats = stats if stats is not None else Telemetry()
         return self.stats
 

@@ -27,8 +27,8 @@ import random
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.routing import (BUSY, CPU, NPU, DispatchPolicy, Query,
-                                QueueManager, TierSpec)
+from repro.core.routing import (BUSY, CPU, EXPIRED, NPU, DispatchPolicy,
+                                Query, QueueManager, RetryPolicy, TierSpec)
 from repro.core.telemetry import SimResult, Telemetry
 
 
@@ -256,6 +256,23 @@ class ServingSimulator:
     ...], slo_s=..., policy=...)`` for arbitrary topologies.  Legacy form
     ``ServingSimulator(npu_model, cpu_model, npu_depth, cpu_depth, slo_s)``
     builds the paper's 2-tier cascade.
+
+    Fault tolerance (mirrors the threaded engine event for event, so the
+    DES can *size* a topology under failures, not just under load):
+
+    * ``deadline_s`` arms every arrival with a relative deadline; queued
+      queries past it are swept out at exact per-query "expire" events and
+      ``pop_batch`` sweeps before every batch formation — dead work never
+      reaches a device model;
+    * ``retry`` re-dispatches failed batches through the policy path with
+      bounded attempts; the exponential backoff is *priced* as simulated
+      delay on the failed tier (its server sleeps it, like the engine's
+      worker thread does);
+    * ``faults`` maps tier name -> :class:`~repro.core.faults.FaultModel`
+      — the DES-side injector matching the engine's ``FaultyBackend``
+      (same ordinal-plan / wall-time-schedule vocabularies);
+    * a ``TierSpec.breaker`` trips/recovers on the simulated clock via the
+      same ``QueueManager.tier_success`` / ``tier_failure`` bridges.
     """
 
     def __init__(self, npu: Optional[DeviceModel] = None,
@@ -263,7 +280,10 @@ class ServingSimulator:
                  npu_depth: int = 0, cpu_depth: int = 0, slo_s: float = 1.0,
                  query_length: int = 75, seed: int = 0, *,
                  tiers: Optional[Sequence[TierSpec]] = None,
-                 policy: Optional[DispatchPolicy] = None):
+                 policy: Optional[DispatchPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 deadline_s: Optional[float] = None,
+                 faults: Optional[Dict[str, "object"]] = None):
         if tiers is None:
             if npu is None:
                 raise ValueError("need an NPU model or an explicit tier list")
@@ -279,6 +299,10 @@ class ServingSimulator:
         self.slo = slo_s
         self.length = query_length
         self.rng = random.Random(seed)
+        # same default as the engine: one attempt, structured failure
+        self.retry = retry if retry is not None else RetryPolicy(max_retries=0)
+        self.deadline_s = deadline_s
+        self.faults: Dict[str, "object"] = dict(faults or {})
 
     # legacy accessors (pre-TierSpec callers peeked at these)
     @property
@@ -300,15 +324,24 @@ class ServingSimulator:
         it, payload-less queries of one length share one key, mirroring the
         engine's deterministic synthetic token streams."""
         res = self.qm.reset(stats=Telemetry(slo=self.slo))
+        # every terminal death (queued expiry, retry exhaustion, re-dispatch
+        # into a full topology) counts `failed` — same bridge the engine's
+        # future-failing path drives
+        self.qm.on_expire = lambda q: res.record_failed()
+        for fm in self.faults.values():
+            fm.reset()
         # event key: (time, priority, seq) — device "kick"s run AFTER every
-        # same-instant arrival so a burst is batched, not started one-by-one
+        # same-instant arrival so a burst is batched, not started one-by-one;
+        # "expire" sweeps run after kicks (pop_batch sweeps first anyway, so
+        # a same-instant batch never contains the dead query either way)
         events: List[Tuple[float, int, int, str, object]] = []
         for i, arr in enumerate(arrivals):
             t, ln = arr[0], arr[1]
             payload = arr[2] if len(arr) > 2 else None
+            dl = None if self.deadline_s is None else t + self.deadline_s
             heapq.heappush(events, (t, 0, i, "arrive",
                                     Query(qid=i, payload=payload, length=ln,
-                                          arrival_t=t)))
+                                          arrival_t=t, deadline=dl)))
         device_tiers = [t for t in self.qm.tiers if t.cache is None]
         admit = bool(self.qm.cache_tiers)
         free_at = {t.name: 0.0 for t in device_tiers}
@@ -320,21 +353,77 @@ class ServingSimulator:
             seq += 1
             return seq
 
+        def armed(q: Query, tier: str) -> None:
+            """A queued query with a deadline gets an exact expiry sweep."""
+            if q.deadline is not None:
+                heapq.heappush(events, (q.deadline, 2, nseq(),
+                                        "expire", tier))
+
         def try_start(tier: str, now: float):
             if free_at[tier] > now + 1e-12:
                 return
             # qm.pop_batch: same batch-formation code as the threaded engine
-            # (bucket_fn-aware); latency follows the LONGEST query — the
-            # batch is one padded execution, not batch[0]'s length
-            batch = self.qm.pop_batch(tier)
+            # (bucket_fn-aware, deadline-swept); latency follows the LONGEST
+            # query — the batch is one padded execution, not batch[0]'s
+            batch = self.qm.pop_batch(tier, now=now)
             if not batch:
                 return
-            dur = models[tier].latency(len(batch),
-                                       max(q.length for q in batch), self.rng)
-            res.record_batch(tier, dur)   # same tail metric as the engine
+            fm = self.faults.get(tier)
+            failed, extra = fm.outcome(now) if fm is not None else (False, 0.)
+            if failed:
+                # the execution dies instead of serving: it costs failure
+                # *detection* (plus any injected stall), never service
+                dur = fm.fail_latency_s + extra
+            else:
+                dur = extra + models[tier].latency(
+                    len(batch), max(q.length for q in batch), self.rng)
+                res.record_batch(tier, dur)  # same tail metric as engine
             done = now + dur
             free_at[tier] = done
-            heapq.heappush(events, (done, 0, nseq(), "done", (tier, batch)))
+            heapq.heappush(events, (done, 0, nseq(), "done",
+                                    (tier, batch, failed, dur)))
+
+        def on_batch_failed(tier: str, batch: List[Query], now: float):
+            """Mirror of the engine's ``_retry_or_fail``: bounded attempts,
+            exhaustion counts ``failed``, survivors re-dispatch after the
+            backoff — which the failed tier's server sits out."""
+            self.qm.tier_failure(tier, now)
+            retryable: List[Query] = []
+            for q in batch:
+                q.attempts += 1
+                if q.attempts > self.retry.max_retries:
+                    res.record_failed()
+                else:
+                    retryable.append(q)
+            if not retryable:
+                try_start(tier, now)
+                return
+            t2 = now + self.retry.backoff(retryable[0].attempts)
+            free_at[tier] = max(free_at[tier], t2)
+            heapq.heappush(events, (t2, 1, nseq(), "redispatch",
+                                    (tier, retryable)))
+
+        def on_redispatch(tier: str, qs: List[Query], now: float):
+            kicked = {tier}
+            for q in qs:
+                if q.expired(now):
+                    # burned its last attempt waiting out the backoff
+                    res.record_deadline_miss(tier)
+                    res.record_failed()
+                    continue
+                res.record_retry(tier)
+                verdict = self.qm.dispatch(q, now=now)
+                if verdict == BUSY:
+                    res.record_failed()     # no surviving capacity
+                    continue
+                if self.qm.is_cache_tier(verdict):
+                    q.done_t = now
+                    res.record_completion(q, verdict)
+                    continue
+                armed(q, verdict)
+                kicked.add(verdict)
+            for t2 in kicked:
+                try_start(t2, now)
 
         while events:
             now, _, _, kind, obj = heapq.heappop(events)
@@ -342,17 +431,30 @@ class ServingSimulator:
                 verdict = self.qm.dispatch(obj)
                 if verdict == BUSY:
                     continue
+                if verdict == EXPIRED:
+                    res.record_failed()
+                    continue
                 if self.qm.is_cache_tier(verdict):
                     # zero-latency tier: the hit completes at +0 service
                     # time — no queue slot, no device event
                     obj.done_t = now
                     res.record_completion(obj, verdict)
                     continue
+                armed(obj, verdict)
                 heapq.heappush(events, (now, 1, nseq(), "kick", verdict))
             elif kind == "kick":
                 try_start(obj, now)
+            elif kind == "expire":
+                self.qm.sweep(obj, now)
+            elif kind == "redispatch":
+                on_redispatch(obj[0], obj[1], now)
             else:
-                tier, batch = obj
+                tier, batch, failed, dur = obj
+                self.qm.queues[tier].finish(len(batch))
+                if failed:
+                    on_batch_failed(tier, batch, now)
+                    continue
+                self.qm.tier_success(tier, dur, now)
                 for q in batch:
                     q.done_t = now
                     res.record_completion(q, tier)
@@ -361,7 +463,6 @@ class ServingSimulator:
                         # the DES never materializes) enters the cache the
                         # instant its batch completes
                         self.qm.admit(q)
-                self.qm.queues[tier].finish(len(batch))
                 try_start(tier, now)
         return res
 

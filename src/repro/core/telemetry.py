@@ -41,6 +41,21 @@ class Telemetry:
     truncated: int = 0
     dispatched: Dict[str, int] = field(default_factory=dict)
     per_device: Dict[str, int] = field(default_factory=dict)
+    # fault-tolerance counters (all zero / empty on a fault-free run, and
+    # omitted from summary() so existing consumers see an unchanged shape):
+    # deadline misses keyed by the tier the query was queued on ("arrival"
+    # when it was already dead at dispatch), retries / backend errors /
+    # breaker transitions keyed by the failing tier, plus terminal counts
+    deadline_misses: Dict[str, int] = field(default_factory=dict)
+    retries: Dict[str, int] = field(default_factory=dict)
+    backend_errors: Dict[str, int] = field(default_factory=dict)
+    breaker_trips: Dict[str, int] = field(default_factory=dict)
+    breaker_recoveries: Dict[str, int] = field(default_factory=dict)
+    failed: int = 0              # queries whose futures terminally failed
+    hook_errors: int = 0         # batch hooks that raised (and were caught)
+    # set by WindVE.shutdown(): False when a worker thread failed to join
+    # (leaked); None until shutdown (and always None for the DES)
+    clean_shutdown: Optional[bool] = None
     # zero-cost cache tier counters, keyed by cache tier name; hit ages are
     # entry staleness samples (hit time - insert time, driver clock)
     cache_hits: Dict[str, int] = field(default_factory=dict)
@@ -101,6 +116,44 @@ class Telemetry:
             if evicted:
                 self.cache_evictions[tier] = \
                     self.cache_evictions.get(tier, 0) + int(evicted)
+
+    # -- fault-tolerance writers ------------------------------------------
+    def record_deadline_miss(self, tier: str) -> None:
+        """One query expired before serving: swept out of ``tier``'s queue
+        past its deadline, or dead on arrival (``tier == "arrival"``)."""
+        with self._lock:
+            self.deadline_misses[tier] = self.deadline_misses.get(tier, 0) + 1
+
+    def record_retry(self, tier: str) -> None:
+        """One re-dispatch attempt burned after ``tier`` failed a batch."""
+        with self._lock:
+            self.retries[tier] = self.retries.get(tier, 0) + 1
+
+    def record_backend_error(self, tier: str) -> None:
+        """One batch execution on ``tier`` raised instead of returning."""
+        with self._lock:
+            self.backend_errors[tier] = self.backend_errors.get(tier, 0) + 1
+
+    def record_breaker_trip(self, tier: str) -> None:
+        with self._lock:
+            self.breaker_trips[tier] = self.breaker_trips.get(tier, 0) + 1
+
+    def record_breaker_recovery(self, tier: str) -> None:
+        with self._lock:
+            self.breaker_recoveries[tier] = \
+                self.breaker_recoveries.get(tier, 0) + 1
+
+    def record_failed(self) -> None:
+        """One query terminally failed: its future carries a ServeError
+        (retries exhausted / worker death), not an embedding."""
+        with self._lock:
+            self.failed += 1
+
+    def record_hook_error(self) -> None:
+        """A batch-completion hook raised; the worker loop survived it but
+        silent hook death is an observability bug, so it is counted."""
+        with self._lock:
+            self.hook_errors += 1
 
     def record_completion(self, query: "Query", tier: str) -> None:
         """The driver sets ``query.done_t`` first; latency is derived."""
@@ -183,8 +236,31 @@ class Telemetry:
         compliance and payload-truncation count (quality loss is surfaced
         next to latency, not hidden in a backend counter).  When a cache
         tier was consulted, hit-rate / counter / staleness fields join the
-        record (omitted entirely on cache-less topologies so existing
-        consumers see an unchanged shape)."""
+        record; when any fault-tolerance event occurred (deadline miss,
+        retry, backend error, breaker transition, terminal failure, hook
+        error), the fault counters join it too (omitted entirely on
+        fault-free cache-less runs so existing consumers see an unchanged
+        shape).  ``clean_shutdown`` appears once the engine has shut down:
+        1.0 when every worker thread joined, 0.0 when one leaked."""
+        fault: Dict[str, float] = {}
+        if (self.deadline_misses or self.retries or self.backend_errors
+                or self.breaker_trips or self.breaker_recoveries
+                or self.failed or self.hook_errors):
+            fault = {
+                "deadline_misses": sum(self.deadline_misses.values()),
+                "retries": sum(self.retries.values()),
+                "backend_errors": sum(self.backend_errors.values()),
+                "breaker_trips": sum(self.breaker_trips.values()),
+                "breaker_recoveries": sum(self.breaker_recoveries.values()),
+                "failed": self.failed,
+                "hook_errors": self.hook_errors,
+                **{f"deadline_misses_{k}": v
+                   for k, v in sorted(self.deadline_misses.items())},
+                **{f"backend_errors_{k}": v
+                   for k, v in sorted(self.backend_errors.items())},
+            }
+        if self.clean_shutdown is not None:
+            fault["clean_shutdown"] = float(self.clean_shutdown)
         cache: Dict[str, float] = {}
         if self.cache_hits or self.cache_misses or self.cache_inserts:
             cache = {
@@ -200,6 +276,7 @@ class Telemetry:
                                    | set(self.cache_misses))},
             }
         return {
+            **fault,
             **cache,
             "accepted": self.accepted,
             "rejected": self.rejected,

@@ -27,14 +27,16 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import estimator
-from repro.core.routing import (BUSY, CPU, NPU, DispatchPolicy, Query,
-                                QueueManager, TierSpec)
+from repro.core.routing import (BUSY, CPU, EXPIRED, NPU, DeadlineExceeded,
+                                DispatchPolicy, Query, QueueManager,
+                                RetryPolicy, ServeError, TierSpec)
 from repro.core.simulator import DeviceModel, sharded_model
 from repro.core.telemetry import EngineStats, Telemetry
 
@@ -245,6 +247,14 @@ class WindVE:
     ``WindVE(npu_backend, cpu_backend, npu_depth, cpu_depth, ...)`` still
     works and builds the paper's NPU/CPU cascade (including Algorithm 2's
     single-device fallback when only one backend exists).
+
+    Fault tolerance: ``retry`` (a :class:`~repro.core.routing.RetryPolicy`)
+    re-dispatches failed batches through the policy path with bounded
+    attempts and exponential backoff; ``default_deadline_s`` arms every
+    submit with a relative deadline (per-call ``submit(deadline_s=...)``
+    overrides); a ``TierSpec.breaker`` makes dispatch route around a tier
+    that keeps failing or stalling.  Terminal failures surface on client
+    futures as structured :class:`~repro.core.routing.ServeError`.
     """
 
     def __init__(self, npu_backend: Optional[Backend] = None,
@@ -254,7 +264,9 @@ class WindVE:
                  max_batch: Optional[Dict[str, int]] = None,
                  workers: Optional[Dict[str, int]] = None, *,
                  tiers: Optional[Sequence[TierSpec]] = None,
-                 policy: Optional[DispatchPolicy] = None):
+                 policy: Optional[DispatchPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 default_deadline_s: Optional[float] = None):
         if tiers is None:
             tiers = self._legacy_tiers(npu_backend, cpu_backend, npu_depth,
                                        cpu_depth, heter_enable,
@@ -285,14 +297,28 @@ class WindVE:
         self._qid = 0
         self._lock = threading.Lock()
         self._stop = threading.Event()
+        # fault tolerance: 0 retries keeps the legacy single-attempt
+        # semantics (one backend failure is terminal for its batch), but
+        # failures now surface as structured ServeError, never raw
+        # backend tracebacks
+        self.retry = retry if retry is not None else RetryPolicy(max_retries=0)
+        self.default_deadline_s = default_deadline_s
+        # queued queries the deadline sweep expires get their future failed
+        self.qm.on_expire = self._expire_query
         self._wake: Dict[str, threading.Event] = {
             t.name: threading.Event() for t in device_tiers}
         # Algorithm 2's worker counts: N instances may drain one tier's
-        # queue (each instance owns its own model copy on real hardware)
+        # queue (each instance owns its own model copy on real hardware).
+        # Live counts detect tier death: when a tier's LAST worker dies of
+        # a crash, its queued queries must be drained and failed over, not
+        # stranded behind a queue nobody will ever pop again.
+        self._live_workers: Dict[str, int] = {
+            t.name: max(1, t.workers) for t in device_tiers}
+        self._thread_tiers: List[str] = [
+            t.name for t in device_tiers for _ in range(max(1, t.workers))]
         self._threads = [
-            threading.Thread(target=self._worker, args=(t.name,), daemon=True)
-            for t in device_tiers
-            for _ in range(max(1, t.workers))]
+            threading.Thread(target=self._worker, args=(name,), daemon=True)
+            for name in self._thread_tiers]
         for t in self._threads:
             t.start()
 
@@ -317,23 +343,41 @@ class WindVE:
         return tiers
 
     # ------------------------------------------------------------------
-    def submit(self, payload=None, length: int = 75) -> Optional[Future]:
+    def submit(self, payload=None, length: int = 75,
+               deadline_s: Optional[float] = None) -> Optional[Future]:
         """Dispatch one query via the policy core.  None == BUSY (rejected).
+
+        ``deadline_s`` (relative; falls back to the engine's
+        ``default_deadline_s``) arms an absolute deadline on the monotonic
+        clock: if the query is still *queued* when it passes, the sweep
+        expires it and its future fails with :class:`DeadlineExceeded`
+        (in-flight work completes late as an SLO violation instead — a
+        batch on a device cannot be recalled).  A query already dead at
+        dispatch never enters a queue: its future comes back with the
+        exception pre-set.
 
         The future is registered BEFORE dispatch: a worker may complete the
         query before this thread returns from ``dispatch``, and must find
         the future to resolve.  On BUSY the registration is rolled back.
         """
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         with self._lock:
             self._qid += 1
+            now = time.monotonic()
             q = Query(qid=self._qid, payload=payload, length=length,
-                      arrival_t=time.monotonic())
+                      arrival_t=now,
+                      deadline=None if deadline_s is None
+                      else now + deadline_s)
         fut: Future = Future()
         self._futures[q.qid] = fut
         verdict = self.qm.dispatch(q)
         if verdict == BUSY:
             self._futures.pop(q.qid, None)
             return None
+        if verdict == EXPIRED:
+            self._fail(q, DeadlineExceeded(qid=q.qid, attempts=q.attempts))
+            return fut
         if self.qm.is_cache_tier(verdict):
             # zero-latency tier: the hit already filled q.emb at dispatch —
             # complete here, no queue slot, no worker, no batch
@@ -355,6 +399,97 @@ class WindVE:
         if hook in self._batch_hooks:
             self._batch_hooks.remove(hook)
 
+    # -- fault tolerance ------------------------------------------------
+    def _fail(self, q: Query, exc: ServeError) -> None:
+        """Terminally fail one query: its future carries a structured
+        ``ServeError`` (never a raw backend traceback) and the failure is
+        counted.  No-op if the future already resolved."""
+        fut = self._futures.pop(q.qid, None)
+        if fut is None:
+            return
+        self.stats.record_failed()
+        fut.set_exception(exc)
+
+    def _expire_query(self, q: Query) -> None:
+        """``QueueManager.on_expire`` hook: a queued query the deadline
+        sweep removed — fail its future with the tier it was waiting on."""
+        self._fail(q, DeadlineExceeded(tier=q.device, qid=q.qid,
+                                       attempts=q.attempts))
+
+    def _retry_or_fail(self, batch: Sequence[Query], tier_name: str,
+                       cause: BaseException, now: float,
+                       kind: str = "backend_error") -> None:
+        """A batch failed on ``tier_name``: re-dispatch every query through
+        the normal policy path (so survivors land on whatever healthy tier
+        the policy picks — including this one, once its slots freed) with
+        bounded attempts, or fail its future with a structured ServeError.
+
+        The exponential backoff is slept HERE, in the failed tier's worker
+        — the tier that just failed is the one that waits, healthy tiers
+        keep draining — and is computed per batch from its first retryable
+        query's attempt count (batch members share a history in the common
+        case; the DES prices the identical delay).
+        """
+        retryable: List[Query] = []
+        for q in batch:
+            q.attempts += 1
+            if q.attempts > self.retry.max_retries:
+                self._fail(q, ServeError(kind, tier=tier_name, qid=q.qid,
+                                         attempts=q.attempts, cause=cause))
+            else:
+                retryable.append(q)
+        if not retryable:
+            return
+        pause = self.retry.backoff(retryable[0].attempts)
+        if pause > 0:
+            time.sleep(pause)
+        for q in retryable:
+            now = time.monotonic()
+            if q.expired(now):
+                # dispatch would refuse it anyway; fail with the tier it
+                # burned its last attempt on rather than the ARRIVAL pseudo
+                # tier so the miss is attributable
+                self.qm.stats.record_deadline_miss(tier_name)
+                self._fail(q, DeadlineExceeded(tier=tier_name, qid=q.qid,
+                                               attempts=q.attempts))
+                continue
+            self.stats.record_retry(tier_name)
+            verdict = self.qm.dispatch(q, now=now)
+            if verdict == BUSY:
+                self._fail(q, ServeError("no_capacity", tier=tier_name,
+                                         qid=q.qid, attempts=q.attempts,
+                                         cause=cause))
+            elif verdict == EXPIRED:
+                self._fail(q, DeadlineExceeded(qid=q.qid,
+                                               attempts=q.attempts))
+            elif self.qm.is_cache_tier(verdict):
+                q.done_t = time.monotonic()
+                self.stats.record_completion(q, verdict)
+                fut = self._futures.pop(q.qid, None)
+                if fut is not None:
+                    fut.set_result(q.emb)
+            else:
+                self._wake[verdict].set()
+
+    def _worker_died(self, tier_name: str, crash: BaseException) -> None:
+        """The tier's LAST worker crashed: quarantine the tier (depth 0 —
+        dispatch and retry can no longer land work on it) and drain its
+        queue, failing over every stranded query so no client future hangs
+        on a queue nobody will ever pop again."""
+        warnings.warn(f"windve: tier {tier_name!r} lost its last worker "
+                      f"({crash!r}); draining its queue", RuntimeWarning)
+        self.qm.set_depth(tier_name, 0)
+        queue = self.qm.queues[tier_name]
+        while True:
+            # raw queue drain (no bucket_fn: buckets don't matter to a
+            # dead tier) — pop_batch marks in-flight, finish releases
+            stranded = queue.pop_batch(1 << 30)
+            if not stranded:
+                return
+            queue.finish(len(stranded))
+            self._retry_or_fail(stranded, tier_name, crash,
+                                time.monotonic(), kind="worker_death")
+
     def _worker(self, tier_name: str) -> None:
         backend = self.backends[tier_name]
         queue = self.qm.queues[tier_name]
@@ -370,65 +505,105 @@ class WindVE:
             batch, fetch, t0 = entry
             try:
                 embs = fetch()
-            except Exception as e:  # pragma: no cover
-                embs = [e] * len(batch)
+                err: Optional[BaseException] = None
+            except BaseException as e:
+                # BaseException on purpose: even a worker-killing crash
+                # (SystemExit and friends) must not strand this batch's
+                # futures — account for it, THEN let it propagate
+                embs, err = None, e
             service = time.monotonic() - t0
-            self.stats.record_batch(tier_name, service)
             now = time.monotonic()
+            queue.finish(len(batch))   # slots free before any re-dispatch
+            if err is not None:
+                self.qm.tier_failure(tier_name, now)
+                self._retry_or_fail(batch, tier_name, err, now)
+                if not isinstance(err, Exception):
+                    raise err           # genuine worker death (accounted)
+                return
+            self.qm.tier_success(tier_name, service, now)
+            self.stats.record_batch(tier_name, service)
             admit = bool(self.qm.cache_tiers)
             for q, emb in zip(batch, embs):
                 q.done_t = now
                 self.stats.record_completion(q, tier_name)
-                if admit and not isinstance(emb, Exception):
+                if admit:
                     # admission hook: insert BEFORE the future resolves, so
                     # a client that saw this result re-submitting the same
                     # tokens is guaranteed the cache hit
                     self.qm.admit(q, emb)
                 fut = self._futures.pop(q.qid, None)
                 if fut is not None:
-                    if isinstance(emb, Exception):
-                        fut.set_exception(emb)
-                    else:
-                        fut.set_result(emb)
-            queue.finish(len(batch))
+                    fut.set_result(emb)
             for hook in list(self._batch_hooks):
                 try:
                     hook(tier_name, batch, service)
-                except Exception:  # pragma: no cover - hooks must not kill
-                    pass           # the worker loop
+                except Exception:      # hooks must not kill the worker
+                    self.stats.record_hook_error()
 
-        while not self._stop.is_set():
-            # live values: online re-calibration may resize the depth;
-            # qm.pop_batch honours the tier's bucket_fn (length-aware batches)
-            batch = self.qm.pop_batch(tier_name)
-            if not batch:
-                if pending is not None:   # drain: nothing left to overlap
-                    resolve(pending)
-                    pending = None
+        crash: Optional[BaseException] = None
+        try:
+            while not self._stop.is_set():
+                # live values: online re-calibration may resize the depth;
+                # qm.pop_batch honours the tier's bucket_fn (length-aware
+                # batches) and sweeps deadline-dead work out first
+                batch = self.qm.pop_batch(tier_name, now=time.monotonic())
+                if not batch:
+                    if pending is not None:  # drain: nothing left to overlap
+                        entry, pending = pending, None
+                        resolve(entry)
+                        continue
+                    self._wake[tier_name].wait(timeout=0.01)
+                    self._wake[tier_name].clear()
                     continue
-                self._wake[tier_name].wait(timeout=0.01)
-                self._wake[tier_name].clear()
-                continue
-            t0 = time.monotonic()
-            if use_async:
-                try:
-                    fetch = backend.embed_batch_async(batch)
-                except Exception as e:
-                    fetch = (lambda err=e, n=len(batch): [err] * n)
-                prev, pending = pending, (batch, fetch, t0)
-                if prev is not None:
-                    resolve(prev)
-            else:
-                resolve((batch, (lambda b=batch: backend.embed_batch(b)), t0))
-        if pending is not None:   # pragma: no cover - shutdown mid-flight
-            resolve(pending)
+                t0 = time.monotonic()
+                if use_async:
+                    try:
+                        fetch = backend.embed_batch_async(batch)
+                    except Exception as e:
+                        def fetch(err=e):
+                            raise err
+                    prev, pending = pending, (batch, fetch, t0)
+                    if prev is not None:
+                        resolve(prev)
+                else:
+                    resolve((batch,
+                             (lambda b=batch: backend.embed_batch(b)), t0))
+            if pending is not None:  # pragma: no cover - shutdown mid-flight
+                entry, pending = pending, None
+                resolve(entry)
+        except BaseException as e:   # worker death, not a batch failure
+            crash = e
+            if pending is not None:
+                # a double-buffered batch this worker still owned: account
+                # it (resolve never saw it, so no double-finish risk)
+                b, pending = pending[0], None
+                queue.finish(len(b))
+                self._retry_or_fail(b, tier_name, e, time.monotonic(),
+                                    kind="worker_death")
+        finally:
+            with self._lock:
+                self._live_workers[tier_name] -= 1
+                last = self._live_workers[tier_name] == 0
+            if crash is not None and last and not self._stop.is_set():
+                self._worker_died(tier_name, crash)
 
     def shutdown(self) -> None:
+        """Stop the workers.  Threads that fail to join within the timeout
+        are *leaked* (a worker wedged in a backend call): each is warned
+        about with its tier name and ``Telemetry.summary()`` reports
+        ``clean_shutdown`` 0.0 instead of silently returning."""
         self._stop.set()
         for e in self._wake.values():
             e.set()
-        for t in self._threads:
+        leaked: List[str] = []
+        for t, tier in zip(self._threads, self._thread_tiers):
             t.join(timeout=2.0)
+            if t.is_alive():
+                leaked.append(tier)
+        self.stats.clean_shutdown = not leaked
+        for tier in sorted(set(leaked)):
+            warnings.warn(f"windve: shutdown leaked a worker thread on tier "
+                          f"{tier!r} (join timed out)", RuntimeWarning)
 
     @property
     def max_concurrency(self) -> int:

@@ -40,9 +40,10 @@ from repro.core.cache import cache_tier
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import (estimate_depth, estimate_depth_per_bucket,
                                   fanout_probe_points)
+from repro.core.health import CircuitBreaker
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, PredictivePolicy, Query,
-                                TierSpec)
+                                RetryPolicy, TierSpec)
 from repro.core.sharded_backend import ShardedEmbedderBackend
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import ModeledBackend, WindVE
@@ -174,7 +175,28 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         print(f"[serve] cache tier: {flags.cache} entries"
               + (f", {flags.cache_bytes} bytes" if flags.cache_bytes else "")
               + " (exact-match LRU at the head of the topology)")
-    engine = WindVE(tiers=tiers, policy=policy_obj)
+    # --opt breaker=N[,breaker_cooldown_ms=M]: per-tier circuit breakers —
+    # N consecutive batch failures trip a tier out of dispatch until its
+    # half-open probe recovers; every policy routes around it transparently
+    if flags.breaker > 0:
+        for t in tiers:
+            if t.cache is None:
+                t.breaker = CircuitBreaker(
+                    failure_threshold=flags.breaker,
+                    cooldown_s=flags.breaker_cooldown_ms / 1e3)
+        print(f"[serve] breakers: trip after {flags.breaker} consecutive "
+              f"failures, cooldown {flags.breaker_cooldown_ms}ms")
+    # --opt retries=N[,retry_backoff_ms=M] + deadline_ms=D: failed batches
+    # re-dispatch through the policy path; overdue queued queries expire
+    retry = RetryPolicy(max_retries=flags.retries,
+                        backoff_s=flags.retry_backoff_ms / 1e3)
+    deadline_s = flags.deadline_ms / 1e3 if flags.deadline_ms > 0 else None
+    if flags.retries or deadline_s is not None:
+        print(f"[serve] fault tolerance: retries={flags.retries} "
+              f"backoff={flags.retry_backoff_ms}ms "
+              f"deadline={flags.deadline_ms or 'none'}ms")
+    engine = WindVE(tiers=tiers, policy=policy_obj, retry=retry,
+                    default_deadline_s=deadline_s)
     if policy == "predictive":
         # live fits: every completed batch feeds the calibrator; every refit
         # streams fresh per-tier (and per-bucket) curves into the policy
@@ -200,7 +222,9 @@ def main() -> None:
                          ",cache=4096,cache_bytes=0 "
                          "(embed_dtype: fp32|bf16|int8|int8_w8a8; cache=N "
                          "puts an N-entry exact-match embedding cache at "
-                         "the head of the dispatch topology)")
+                         "the head of the dispatch topology); fault "
+                         "tolerance: deadline_ms=N,retries=N,"
+                         "retry_backoff_ms=N,breaker=N,breaker_cooldown_ms=N")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
     ap.add_argument("--npu-devices", type=int, default=1,
@@ -219,12 +243,26 @@ def main() -> None:
     queries = make_queries(args.queries, cfg.vocab_size, args.length)
     t0 = time.monotonic()
     futs = [engine.submit(payload=q, length=args.length) for q in queries]
-    done = [f.result(timeout=60) for f in futs if f is not None]
+    done, failures = [], []
+    for f in futs:
+        if f is None:
+            continue
+        try:
+            done.append(f.result(timeout=60))
+        except Exception as e:       # ServeError / DeadlineExceeded
+            failures.append(e)
     wall = time.monotonic() - t0
     s = engine.stats
     print(f"[serve] {args.queries} queries in {wall:.2f}s: "
           f"accepted={s.accepted} rejected(BUSY)={s.rejected} "
-          f"completed={len(done)}")
+          f"completed={len(done)} failed={len(failures)}")
+    if failures or s.deadline_misses or s.backend_errors or s.retries:
+        print(f"[serve] faults: deadline_misses="
+              f"{sum(s.deadline_misses.values())} "
+              f"retries={sum(s.retries.values())} "
+              f"backend_errors={sum(s.backend_errors.values())} "
+              f"breaker trips={sum(s.breaker_trips.values())} "
+              f"recoveries={sum(s.breaker_recoveries.values())}")
     print(f"[serve] per-device: {s.per_device}  "
           f"p50={s.p(50):.3f}s p99={s.p(99):.3f}s  "
           f"SLO({args.slo}s) violations="
@@ -244,6 +282,7 @@ def main() -> None:
               f"staleness p50={s.cache_staleness(50):.2f}s")
     print(f"[serve] max concurrency C = {engine.max_concurrency}")
     engine.shutdown()
+    print(f"[serve] clean shutdown: {engine.stats.clean_shutdown}")
 
 
 if __name__ == "__main__":

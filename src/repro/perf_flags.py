@@ -95,6 +95,30 @@ class PerfFlags:
     # serving: optional byte budget for the cache tier (summed embedding
     # nbytes) on top of the entry count; 0 = entries-only bound.
     cache_bytes: int = 0
+    # serving fault tolerance: N > 0 arms every submitted query with a
+    # relative deadline of N milliseconds — queries still QUEUED past it
+    # are swept out (their futures fail with DeadlineExceeded, counted as
+    # deadline_misses) instead of serving uselessly late.  0 = no deadline
+    # (baseline).
+    deadline_ms: int = 0
+    # serving fault tolerance: re-dispatch each query of a failed batch up
+    # to N times through the normal policy path (survivors fail over to
+    # whatever healthy tier the policy ranks first); exhausted attempts
+    # fail the future with a structured ServeError.  0 = one attempt,
+    # failures terminal (baseline).
+    retries: int = 0
+    # serving fault tolerance: base exponential backoff (milliseconds)
+    # before retry attempt k: backoff * 2^(k-1), slept by the FAILED
+    # tier's worker (healthy tiers keep draining).  0 = immediate retry.
+    retry_backoff_ms: int = 0
+    # serving fault tolerance: trip a tier's circuit breaker after N
+    # consecutive batch failures — dispatch routes around the open tier
+    # until a half-open probe succeeds.  0 = no breakers (baseline).
+    breaker: int = 0
+    # serving fault tolerance: how long (milliseconds) a tripped breaker
+    # stays open before the half-open recovery probe.  Only meaningful
+    # with breaker > 0.
+    breaker_cooldown_ms: int = 1000
 
 
 FLAGS = PerfFlags()

@@ -1,0 +1,233 @@
+"""Engine-vs-DES fault parity: seeded fault schedules, identical counters.
+
+The fault-tolerance layer lives in the shared scheduling core, so both
+drivers must agree not just on routing (``test_parity_properties``) but on
+*failure accounting*: under the same ordinal :class:`FaultPlan` (the
+deterministic parity vocabulary — batch ordinals, not wall time) the
+threaded engine and the DES must report identical
+
+* ``retries`` / ``backend_errors`` per tier,
+* terminal ``failed`` counts (retry exhaustion),
+* ``breaker_trips`` (threshold trips are clock-free),
+* dispatch verdicts and completion counts.
+
+Determinism notes (same as ``test_parity_properties``): bursts are
+submitted under a pinned GIL so the engine's workers drain a static backlog
+exactly like the DES drains same-instant arrivals; tier depths exceed the
+burst so no BUSY verdict can depend on wall-clock races; breaker cooldowns
+are far longer than a run so open tiers stay open on both clocks (the
+half-open recovery test drives its clock explicitly with wide margins).
+"""
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.faults import FaultModel, FaultPlan, FaultyBackend
+from repro.core.health import CircuitBreaker
+from repro.core.routing import DeadlineExceeded, RetryPolicy, TierSpec
+from repro.core.simulator import DeviceModel, ServingSimulator
+from repro.core.windve import ModeledBackend, WindVE
+
+T0, T1 = "T0", "T1"
+BETAS = {T0: 0.05, T1: 0.07}
+LEN = 16
+
+
+def models():
+    return {n: DeviceModel(n, beta=b, b=0.0, a=0.0)
+            for n, b in BETAS.items()}
+
+
+def pinned_burst(ve, n, **kw):
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(5.0)
+    try:
+        return [ve.submit(length=LEN, **kw) for _ in range(n)]
+    finally:
+        sys.setswitchinterval(old)
+
+
+def drain(futs, timeout=30):
+    """(completions, failures) over a burst's futures — bounded wait."""
+    done = fail = 0
+    for f in futs:
+        if f is None:
+            continue
+        try:
+            f.result(timeout=timeout)
+            done += 1
+        except Exception:
+            fail += 1
+    return done, fail
+
+
+def counters(t):
+    """The fault-accounting record both drivers must agree on."""
+    return {
+        "dispatched": dict(t.dispatched),
+        "rejected": t.rejected,
+        "completed": t.n_completed,
+        "per_device": dict(t.per_device),
+        "deadline_misses": dict(t.deadline_misses),
+        "retries": dict(t.retries),
+        "backend_errors": dict(t.backend_errors),
+        "breaker_trips": dict(t.breaker_trips),
+        "breaker_recoveries": dict(t.breaker_recoveries),
+        "failed": t.failed,
+    }
+
+
+def breaker():
+    # cooldown far beyond any run: a trip stays a trip on either clock
+    return CircuitBreaker(failure_threshold=2, cooldown_s=1000.0)
+
+
+def engine_run(plan, retry, n, max_batch, depth):
+    m = models()
+    ve = WindVE(
+        tiers=[TierSpec(T0, depth,
+                        backend=FaultyBackend(
+                            ModeledBackend(m[T0], embed_dim=4), plan=plan),
+                        max_batch=max_batch, breaker=breaker()),
+               TierSpec(T1, depth,
+                        backend=ModeledBackend(m[T1], embed_dim=4),
+                        max_batch=max_batch, breaker=breaker())],
+        retry=retry)
+    try:
+        done, fail = drain(pinned_burst(ve, n))
+        out = counters(ve.stats)
+        out["client_done"], out["client_fail"] = done, fail
+    finally:
+        ve.shutdown()
+    return out
+
+
+def des_run(plan, retry, n, max_batch, depth):
+    m = models()
+    sim = ServingSimulator(
+        tiers=[TierSpec(T0, depth, model=m[T0], max_batch=max_batch,
+                        breaker=breaker()),
+               TierSpec(T1, depth, model=m[T1], max_batch=max_batch,
+                        breaker=breaker())],
+        slo_s=100.0, retry=retry, faults={T0: FaultModel(plan=plan)})
+    res = sim.run([(0.0, LEN)] * n)
+    out = counters(res)
+    out["client_done"], out["client_fail"] = res.n_completed, res.failed
+    return out
+
+
+CONFIG = st.tuples(
+    st.lists(st.integers(min_value=0, max_value=4),   # T0 fail ordinals
+             min_size=0, max_size=4),
+    st.integers(min_value=0, max_value=3),            # max_retries
+    st.integers(min_value=4, max_value=12),           # burst size
+    st.sampled_from([1, 2, 4]),                       # max_batch
+)
+
+
+@settings(max_examples=6, deadline=None)
+@given(CONFIG)
+def test_fault_counters_agree_under_seeded_plans(cfg):
+    fails, retries, n, max_batch = cfg
+    plan = FaultPlan(fail=frozenset(fails))
+    retry = RetryPolicy(max_retries=retries, backoff_s=0.0)
+    depth = n + 4          # no BUSY: rejection never hangs on a clock race
+    eng = engine_run(plan, retry, n, max_batch, depth)
+    des = des_run(plan, retry, n, max_batch, depth)
+    assert eng == des, (cfg, eng, des)
+    # internal consistency: every accepted query ended exactly one way
+    assert eng["client_done"] + eng["client_fail"] == n
+
+
+def test_dead_on_arrival_parity():
+    """deadline_s=0: every query is dead at dispatch in both drivers —
+    the ARRIVAL pseudo-tier owns every miss, nothing reaches a queue."""
+    n = 5
+    m = models()
+    ve = WindVE(tiers=[TierSpec(T0, 8,
+                               backend=ModeledBackend(m[T0], embed_dim=4))],
+                default_deadline_s=0.0)
+    try:
+        futs = pinned_burst(ve, n)
+        for f in futs:
+            with pytest.raises(DeadlineExceeded):
+                f.result(timeout=5)
+        eng = counters(ve.stats)
+    finally:
+        ve.shutdown()
+    sim = ServingSimulator(tiers=[TierSpec(T0, 8, model=m[T0])],
+                           slo_s=100.0, deadline_s=0.0)
+    des = counters(sim.run([(0.0, LEN)] * n))
+    assert eng == des
+    assert eng["deadline_misses"] == {"arrival": n}
+    assert eng["failed"] == n and eng["dispatched"] == {}
+
+
+def test_queued_expiry_parity():
+    """A deadline that exactly one queued query misses: serial batches of 1
+    at 0.3 s/batch, deadline 0.75 s — queries 1-3 serve (the third finishes
+    late; lateness is an SLO violation, not a miss), the fourth expires in
+    the queue.  Event margins are >= 0.15 s, far above engine jitter."""
+    n, beta, deadline = 4, 0.3, 0.75
+    model = DeviceModel(T0, beta=beta, b=0.0, a=0.0)
+    ve = WindVE(tiers=[TierSpec(T0, 8,
+                               backend=ModeledBackend(model, embed_dim=4),
+                               max_batch=1)],
+                default_deadline_s=deadline)
+    try:
+        done, fail = drain(pinned_burst(ve, n))
+        eng = counters(ve.stats)
+    finally:
+        ve.shutdown()
+    sim = ServingSimulator(tiers=[TierSpec(T0, 8, model=model, max_batch=1)],
+                           slo_s=100.0, deadline_s=deadline)
+    des = counters(sim.run([(0.0, LEN)] * n))
+    assert eng == des
+    assert eng["deadline_misses"] == {T0: 1}
+    assert eng["completed"] == 3 and eng["failed"] == 1
+    assert (done, fail) == (3, 1)
+
+
+def test_latency_stall_trip_and_recovery_parity():
+    """A stalled (not raising) execution trips the latency-EWMA breaker in
+    both drivers, and the half-open probe recovery is replayed identically:
+    burst 1 stalls and trips T0; after the cooldown, burst 2's first
+    dispatch ticks T0 half-open, serves as the probe, and re-closes it."""
+    stall, trip_at, cooldown = 0.5, 0.2, 0.5
+    plan = FaultPlan(stall={0}, stall_s=stall)
+    m = models()
+
+    def mk_breaker():
+        return CircuitBreaker(failure_threshold=100, cooldown_s=cooldown,
+                              latency_trip_s=trip_at)
+
+    ve = WindVE(
+        tiers=[TierSpec(T0, 8,
+                        backend=FaultyBackend(
+                            ModeledBackend(m[T0], embed_dim=4), plan=plan),
+                        max_batch=2, breaker=mk_breaker()),
+               TierSpec(T1, 8, backend=ModeledBackend(m[T1], embed_dim=4),
+                        max_batch=2)])
+    try:
+        assert drain(pinned_burst(ve, 2)) == (2, 0)   # stalled, served, trip
+        import time
+        time.sleep(stall + cooldown + 0.3)            # well past cooldown
+        assert drain(pinned_burst(ve, 2)) == (2, 0)   # the probe, re-close
+        eng = counters(ve.stats)
+    finally:
+        ve.shutdown()
+
+    sim = ServingSimulator(
+        tiers=[TierSpec(T0, 8, model=m[T0], max_batch=2,
+                        breaker=mk_breaker()),
+               TierSpec(T1, 8, model=m[T1], max_batch=2)],
+        slo_s=100.0, faults={T0: FaultModel(plan=plan)})
+    # burst 2 arrives long after stall+cooldown (margins >> jitter)
+    des = counters(sim.run([(0.0, LEN)] * 2 + [(5.0, LEN)] * 2))
+    assert eng == des
+    assert eng["breaker_trips"] == {T0: 1}
+    assert eng["breaker_recoveries"] == {T0: 1}
+    assert eng["dispatched"] == {T0: 4}               # probe went to T0
+    assert eng["backend_errors"] == {}                # a stall never raises

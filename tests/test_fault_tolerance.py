@@ -1,0 +1,324 @@
+"""Engine fault tolerance (``repro.core.windve``): structured failures,
+retry/failover, deadlines, worker-death recovery, hook isolation and
+shutdown hygiene.
+
+The regression at the heart of this suite: a raising backend — or a dying
+worker thread — must NEVER strand a client future.  Every submitted query
+ends in a result or a structured :class:`ServeError` within a bounded wait.
+"""
+import sys
+import time
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.faults import BackendError
+from repro.core.health import CircuitBreaker
+from repro.core.routing import DeadlineExceeded, RetryPolicy, ServeError, \
+    TierSpec
+from repro.core.windve import WindVE
+
+T0, T1 = "T0", "T1"
+
+
+class OkBackend:
+    """Serves instantly: distinct embedding per qid."""
+
+    name = "ok"
+    telemetry = None
+
+    def embed_batch(self, queries):
+        return [np.full(4, float(q.qid), np.float32) for q in queries]
+
+
+class SlowBackend(OkBackend):
+    """Serves after a fixed wall-clock sleep (occupies its worker)."""
+
+    name = "slow"
+
+    def __init__(self, delay_s):
+        self.delay_s = delay_s
+
+    def embed_batch(self, queries):
+        time.sleep(self.delay_s)
+        return super().embed_batch(queries)
+
+
+class FailBackend:
+    """Every execution raises — a permanently dead device pool."""
+
+    name = "fail"
+    telemetry = None
+
+    def embed_batch(self, queries):
+        raise BackendError("device pool down")
+
+
+class KillerBackend:
+    """Raises a non-Exception BaseException: the worker THREAD dies."""
+
+    name = "killer"
+    telemetry = None
+
+    def embed_batch(self, queries):
+        raise SystemExit("worker killed")
+
+
+class WedgedBackend(OkBackend):
+    """Blocks until released — a worker stuck inside a device call."""
+
+    name = "wedged"
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def embed_batch(self, queries):
+        self.release.wait(timeout=30.0)
+        return super().embed_batch(queries)
+
+
+def pinned_submit(ve, n, **kw):
+    """Submit a burst while holding the GIL so no worker acts mid-burst."""
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(5.0)
+    try:
+        return [ve.submit(length=16, **kw) for _ in range(n)]
+    finally:
+        sys.setswitchinterval(old)
+
+
+# ---------------------------------------------------------------------------
+# structured failures + retry/failover
+# ---------------------------------------------------------------------------
+
+def test_backend_failure_is_a_structured_serve_error():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=FailBackend())])
+    try:
+        fut = ve.submit(length=16)
+        with pytest.raises(ServeError) as ei:
+            fut.result(timeout=10)
+        err = ei.value
+        assert err.kind == "backend_error"
+        assert err.tier == T0
+        assert err.attempts == 1              # default policy: one attempt
+        assert isinstance(err.cause, BackendError)
+        assert ve.stats.failed == 1
+        assert ve.stats.backend_errors == {T0: 1}
+        assert ve.stats.retries == {}
+    finally:
+        ve.shutdown()
+
+
+def test_retry_fails_over_to_healthy_tier():
+    ve = WindVE(
+        tiers=[TierSpec(T0, 4, backend=FailBackend(),
+                        breaker=CircuitBreaker(failure_threshold=1,
+                                               cooldown_s=60.0)),
+               TierSpec(T1, 4, backend=OkBackend())],
+        retry=RetryPolicy(max_retries=3))
+    try:
+        fut = ve.submit(length=16)
+        emb = fut.result(timeout=10)
+        assert emb is not None
+        assert ve.stats.failed == 0
+        assert sum(ve.stats.retries.values()) >= 1
+        assert ve.stats.backend_errors.get(T0, 0) >= 1
+        assert ve.stats.breaker_trips == {T0: 1}
+        assert ve.stats.per_device == {T1: 1}  # served by the healthy tier
+    finally:
+        ve.shutdown()
+
+
+def test_retry_exhaustion_reports_attempt_count():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=FailBackend())],
+                retry=RetryPolicy(max_retries=2))
+    try:
+        fut = ve.submit(length=16)
+        with pytest.raises(ServeError) as ei:
+            fut.result(timeout=10)
+        assert ei.value.kind == "backend_error"
+        assert ei.value.attempts == 3          # initial + 2 retries
+        assert sum(ve.stats.retries.values()) == 2
+    finally:
+        ve.shutdown()
+
+
+def test_retry_into_full_topology_is_no_capacity():
+    # T0 (healthy, slow) is busy for the whole test; T1 fails and trips its
+    # breaker, so the retry re-dispatch finds no surviving capacity
+    ve = WindVE(
+        tiers=[TierSpec(T0, 1, backend=SlowBackend(1.0)),
+               TierSpec(T1, 1, backend=FailBackend(),
+                        breaker=CircuitBreaker(failure_threshold=1,
+                                               cooldown_s=60.0))],
+        retry=RetryPolicy(max_retries=2))
+    try:
+        futs = pinned_submit(ve, 2)            # q1 -> T0 (slow), q2 -> T1
+        assert all(f is not None for f in futs)
+        with pytest.raises(ServeError) as ei:
+            futs[1].result(timeout=10)
+        assert ei.value.kind == "no_capacity"
+        assert futs[0].result(timeout=10) is not None
+        assert ve.stats.failed == 1
+    finally:
+        ve.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_dead_on_arrival_future_fails_immediately():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=OkBackend())])
+    try:
+        fut = ve.submit(length=16, deadline_s=0.0)
+        assert fut is not None and fut.done()
+        with pytest.raises(DeadlineExceeded) as ei:
+            fut.result(timeout=1)
+        assert ei.value.kind == "deadline"
+        assert ve.stats.deadline_misses == {"arrival": 1}
+        assert ve.stats.failed == 1
+        assert ve.stats.dispatched == {}       # it never entered a queue
+    finally:
+        ve.shutdown()
+
+
+def test_queued_query_expires_in_flight_completes_late():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=SlowBackend(0.3),
+                                max_batch=1)],
+                default_deadline_s=0.15)
+    try:
+        futs = pinned_submit(ve, 2)
+        assert all(f is not None for f in futs)
+        # one of the two went in-flight immediately and completes LATE (an
+        # SLO violation, not a miss: a batch on a device can't be recalled);
+        # the other sat queued past the deadline and was swept out
+        results, errors = [], []
+        for f in futs:
+            try:
+                results.append(f.result(timeout=10))
+            except DeadlineExceeded as e:
+                errors.append(e)
+        assert len(results) == 1 and len(errors) == 1
+        assert errors[0].tier == T0            # the tier it waited on
+        assert ve.stats.deadline_misses == {T0: 1}
+        assert ve.stats.failed == 1
+        assert ve.stats.n_completed == 1
+    finally:
+        ve.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# worker death — the "never strand a client" regression
+# ---------------------------------------------------------------------------
+
+def test_worker_death_never_strands_clients():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ve = WindVE(tiers=[TierSpec(T0, 4, backend=KillerBackend(),
+                                    max_batch=1)])
+        try:
+            futs = pinned_submit(ve, 4)
+            assert all(f is not None for f in futs)
+            kinds = []
+            for f in futs:
+                # bounded wait: before the drain existed these hung forever
+                with pytest.raises(ServeError) as ei:
+                    f.result(timeout=10)
+                kinds.append(ei.value.kind)
+            # the batch the dying worker owned fails as backend_error; the
+            # stranded queued queries fail as worker_death via the drain
+            assert "worker_death" in kinds
+            assert ve.stats.failed == 4
+            # the dead tier is quarantined: no future dispatch can land
+            assert ve.qm.depth(T0) == 0
+        finally:
+            ve.shutdown()
+    assert any("lost its last worker" in str(x.message) for x in w)
+
+
+def test_worker_death_fails_over_queued_queries():
+    ve = WindVE(
+        tiers=[TierSpec(T0, 4, backend=KillerBackend(), max_batch=1),
+               TierSpec(T1, 8, backend=OkBackend())],
+        retry=RetryPolicy(max_retries=3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        try:
+            futs = pinned_submit(ve, 4)        # all land on T0 (cascade)
+            assert all(f is not None for f in futs)
+            for f in futs:
+                assert f.result(timeout=10) is not None
+            assert ve.stats.failed == 0
+            assert ve.stats.per_device == {T1: 4}
+            assert sum(ve.stats.retries.values()) >= 4
+        finally:
+            ve.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# batch hooks + shutdown hygiene
+# ---------------------------------------------------------------------------
+
+def test_raising_hook_is_counted_and_serving_unaffected():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=OkBackend())])
+    try:
+        seen = []
+
+        def bad_hook(tier, batch, lat):
+            raise RuntimeError("hook bug")
+
+        ve.add_batch_hook(bad_hook)
+        ve.add_batch_hook(lambda tier, batch, lat: seen.append(len(batch)))
+        futs = [ve.submit(length=16) for _ in range(3)]
+        for f in futs:
+            assert f.result(timeout=10) is not None
+        assert ve.stats.hook_errors >= 1
+        assert sum(seen) == 3                  # later hooks still ran
+        assert ve.stats.failed == 0
+        assert ve.stats.summary()["hook_errors"] == ve.stats.hook_errors
+    finally:
+        ve.shutdown()
+
+
+def test_fault_free_run_keeps_summary_shape():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=OkBackend())])
+    try:
+        ve.submit(length=16).result(timeout=10)
+        s = ve.stats.summary()
+        # fault counters are omitted entirely on a fault-free run so
+        # existing consumers see an unchanged record shape
+        for key in ("failed", "deadline_misses", "retries",
+                    "backend_errors", "clean_shutdown"):
+            assert key not in s
+    finally:
+        ve.shutdown()
+
+
+def test_clean_shutdown_flag():
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=OkBackend())])
+    ve.submit(length=16).result(timeout=10)
+    assert ve.stats.clean_shutdown is None     # not shut down yet
+    ve.shutdown()
+    assert ve.stats.clean_shutdown is True
+    assert ve.stats.summary()["clean_shutdown"] == 1.0
+
+
+def test_leaked_worker_is_detected_and_named():
+    be = WedgedBackend()
+    ve = WindVE(tiers=[TierSpec(T0, 4, backend=be)])
+    try:
+        fut = ve.submit(length=16)
+        time.sleep(0.05)                       # let the worker wedge
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ve.shutdown()                      # join(2.0) times out
+        assert ve.stats.clean_shutdown is False
+        assert ve.stats.summary()["clean_shutdown"] == 0.0
+        assert any("leaked" in str(x.message) and T0 in str(x.message)
+                   for x in w)
+    finally:
+        be.release.set()                       # unwedge the daemon thread
+        fut.result(timeout=10)

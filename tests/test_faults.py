@@ -1,0 +1,201 @@
+"""Fault-injection vocabulary (``repro.core.faults``): ordinal plans,
+wall-time schedules, the engine-side ``FaultyBackend`` wrapper and its DES
+mirror ``FaultModel``."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import availability
+from repro.core.faults import (BackendError, FaultModel, FaultPlan,
+                               FaultSchedule, FaultyBackend)
+from repro.core.routing import Query
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultSchedule
+# ---------------------------------------------------------------------------
+
+def test_plan_normalizes_iterables_to_frozensets():
+    p = FaultPlan(fail=[2, 3], stall={1}, corrupt=(0,), stall_s=0.5)
+    assert p.fail == frozenset({2, 3})
+    assert p.stall == frozenset({1})
+    assert p.corrupt == frozenset({0})
+
+
+def test_plan_rejects_negative_stall():
+    with pytest.raises(ValueError):
+        FaultPlan(stall_s=-0.1)
+
+
+def test_schedule_sorts_and_validates_windows():
+    s = FaultSchedule(((5.0, 6.0), (1.0, 2.0)))
+    assert s.windows == ((1.0, 2.0), (5.0, 6.0))
+    with pytest.raises(ValueError):
+        FaultSchedule(((2.0, 2.0),))
+    with pytest.raises(ValueError):
+        FaultSchedule(((3.0, 1.0),))
+
+
+def test_schedule_is_down_half_open_interval():
+    s = FaultSchedule(((1.0, 2.0),))
+    assert not s.is_down(0.5)
+    assert s.is_down(1.0)                # [start, end)
+    assert s.is_down(1.5)
+    assert not s.is_down(2.0)
+    assert s.down_s == pytest.approx(1.0)
+
+
+def test_schedule_next_up():
+    s = FaultSchedule(((1.0, 2.0), (4.0, 5.0)))
+    assert s.next_up(0.0) == 0.0         # already up
+    assert s.next_up(1.5) == 2.0
+    assert s.next_up(4.0) == 5.0
+
+
+def test_from_mttf_deterministic_and_bounded():
+    a = FaultSchedule.from_mttf(10.0, 2.0, horizon_s=100.0, seed=7)
+    b = FaultSchedule.from_mttf(10.0, 2.0, horizon_s=100.0, seed=7)
+    assert a.windows == b.windows        # seeded: replayable
+    c = FaultSchedule.from_mttf(10.0, 2.0, horizon_s=100.0, seed=8)
+    assert a.windows != c.windows
+    for s, e in a.windows:
+        assert 0.0 < s < e <= 100.0
+
+
+def test_from_mttf_up_fraction_matches_availability():
+    """Over a long horizon the empirical up fraction approaches the
+    alternating-renewal closed form MTTF/(MTTF+MTTR) (cost_model)."""
+    mttf, mttr, horizon = 10.0, 5.0, 50_000.0
+    s = FaultSchedule.from_mttf(mttf, mttr, horizon_s=horizon, seed=0)
+    up_frac = 1.0 - s.down_s / horizon
+    assert up_frac == pytest.approx(availability(mttf, mttr), abs=0.03)
+
+
+def test_from_mttf_validation():
+    with pytest.raises(ValueError):
+        FaultSchedule.from_mttf(0.0, 1.0, 10.0)
+    with pytest.raises(ValueError):
+        FaultSchedule.from_mttf(1.0, -1.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# FaultyBackend (engine side)
+# ---------------------------------------------------------------------------
+
+class CountingBackend:
+    """Minimal Backend: distinct embedding per qid, no jax needed."""
+
+    name = "counting"
+    telemetry = None
+
+    def __init__(self):
+        self.calls = 0
+
+    def embed_batch(self, queries):
+        self.calls += 1
+        return [np.full(4, float(q.qid), np.float32) for q in queries]
+
+
+def q(i):
+    return Query(qid=i, length=8)
+
+
+def test_faulty_backend_ordinal_fail():
+    fb = FaultyBackend(CountingBackend(), plan=FaultPlan(fail={1}))
+    assert fb.embed_batch([q(0)])[0][0] == 0.0      # execution #0 fine
+    with pytest.raises(BackendError):
+        fb.embed_batch([q(1)])                      # execution #1 injected
+    assert fb.embed_batch([q(2)])[0][0] == 2.0      # execution #2 fine
+    assert fb.executions == 3
+    assert fb.injected_failures == 1
+    assert fb.inner.calls == 2                      # the failure never ran
+
+
+def test_faulty_backend_ordinal_corrupt_keeps_shape():
+    fb = FaultyBackend(CountingBackend(), plan=FaultPlan(corrupt={0}))
+    [good] = CountingBackend().embed_batch([q(5)])
+    [bad] = fb.embed_batch([q(5)])
+    assert bad.shape == good.shape and bad.dtype == good.dtype
+    assert not np.allclose(bad, good)               # silently WRONG values
+    assert fb.injected_corruptions == 1
+
+
+def test_faulty_backend_stall_then_serve():
+    fb = FaultyBackend(CountingBackend(),
+                       plan=FaultPlan(stall={0}, stall_s=0.0))
+    out = fb.embed_batch([q(1), q(2)])
+    assert len(out) == 2
+    assert fb.injected_stalls == 1
+
+
+def test_faulty_backend_schedule_uses_relative_clock():
+    t = [100.0]                                      # fake wall clock
+    fb = FaultyBackend(CountingBackend(),
+                       schedule=FaultSchedule(((1.0, 2.0),)),
+                       clock=lambda: t[0])
+    fb.embed_batch([q(0)])                           # t0 pinned at 100.0
+    t[0] = 101.5                                     # 1.5s in: down window
+    with pytest.raises(BackendError):
+        fb.embed_batch([q(1)])
+    t[0] = 102.5                                     # window closed
+    assert len(fb.embed_batch([q(2)])) == 1
+    assert fb.injected_failures == 1
+
+
+def test_faulty_backend_forwards_telemetry():
+    inner = CountingBackend()
+    fb = FaultyBackend(inner)
+    marker = object()
+    fb.telemetry = marker
+    assert inner.telemetry is marker
+    assert fb.telemetry is marker
+    assert fb.name == "faulty(counting)"
+    assert fb.async_dispatch is False
+
+
+# ---------------------------------------------------------------------------
+# FaultModel (DES side)
+# ---------------------------------------------------------------------------
+
+def test_fault_model_mirrors_ordinal_plan():
+    fm = FaultModel(plan=FaultPlan(fail={1}, stall={0}, stall_s=0.3))
+    failed, extra = fm.outcome(now=0.0)              # #0: stalled, served
+    assert (failed, extra) == (False, 0.3)
+    failed, extra = fm.outcome(now=0.1)              # #1: injected failure
+    assert (failed, extra) == (True, 0.0)
+    failed, extra = fm.outcome(now=0.2)              # #2: clean
+    assert (failed, extra) == (False, 0.0)
+    assert fm.executions == 3
+    assert fm.injected_failures == 1
+    assert fm.injected_stalls == 1
+
+
+def test_fault_model_schedule_on_sim_time():
+    fm = FaultModel(schedule=FaultSchedule(((1.0, 2.0),)),
+                    fail_latency_s=0.05)
+    assert fm.outcome(now=0.5) == (False, 0.0)
+    assert fm.outcome(now=1.5) == (True, 0.0)
+    assert fm.fail_latency_s == 0.05
+    fm.reset()
+    assert fm.executions == 0 and fm.injected_failures == 0
+
+
+def test_fault_model_and_backend_agree_on_a_plan():
+    """The parity contract in miniature: the same ordinal plan produces the
+    same per-execution outcome sequence through both injectors."""
+    plan = FaultPlan(fail={0, 3}, stall={2}, stall_s=0.0)
+    fm = FaultModel(plan=plan)
+    fb = FaultyBackend(CountingBackend(), plan=plan)
+    eng = []
+    for i in range(5):
+        try:
+            fb.embed_batch([q(i)])
+            eng.append(False)
+        except BackendError:
+            eng.append(True)
+    des = [fm.outcome(float(i))[0] for i in range(5)]
+    assert eng == des == [True, False, False, True, False]
+
+
+def test_fault_model_rejects_negative_fail_latency():
+    with pytest.raises(ValueError):
+        FaultModel(fail_latency_s=-0.1)

@@ -1,0 +1,178 @@
+"""Circuit-breaker state machine (``repro.core.health``).
+
+The breaker is clock-free (callers pass ``now``), so every transition here
+is driven explicitly — the same contract both drivers rely on for
+deterministic trip/recover sequences.
+"""
+import pytest
+
+from repro.core.health import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from repro.core.routing import QueueManager, TierSpec, dispatchable
+
+
+def test_starts_closed_and_dispatchable():
+    br = CircuitBreaker()
+    assert br.state == CLOSED
+    assert br.dispatchable
+    assert br.trips == 0 and br.recoveries == 0
+
+
+def test_trips_after_consecutive_failures():
+    br = CircuitBreaker(failure_threshold=3, cooldown_s=1.0)
+    br.record_failure(now=0.0)
+    br.record_failure(now=0.1)
+    assert br.state == CLOSED
+    br.record_failure(now=0.2)
+    assert br.state == OPEN
+    assert not br.dispatchable
+    assert br.trips == 1
+    assert br.last_trip_reason == "failures"
+
+
+def test_success_resets_failure_streak():
+    br = CircuitBreaker(failure_threshold=2)
+    br.record_failure(now=0.0)
+    br.record_success(0.01, now=0.1)
+    br.record_failure(now=0.2)          # streak restarts at 1
+    assert br.state == CLOSED
+    br.record_failure(now=0.3)
+    assert br.state == OPEN
+
+
+def test_cooldown_then_half_open_probe_recovers():
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0)
+    br.record_failure(now=0.0)
+    assert br.state == OPEN
+    assert br.tick(0.5) == OPEN          # cooldown not elapsed
+    assert br.tick(1.0) == HALF_OPEN     # dispatchable again: the probe
+    assert br.dispatchable
+    br.record_success(0.02, now=1.1)
+    assert br.state == CLOSED
+    assert br.recoveries == 1
+    # recovery restarts the latency EWMA from the probe, not the stale
+    # pre-trip history
+    assert br.latency_ewma_s == pytest.approx(0.02)
+
+
+def test_half_open_probe_failure_reopens():
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0)
+    br.record_failure(now=0.0)
+    br.tick(1.0)
+    br.record_failure(now=1.0)
+    assert br.state == OPEN
+    assert br.trips == 2
+    assert br.last_trip_reason == "probe-failure"
+    # the new cooldown runs from the probe failure
+    assert br.tick(1.5) == OPEN
+    assert br.tick(2.0) == HALF_OPEN
+
+
+def test_failure_while_open_extends_cooldown():
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0)
+    br.record_failure(now=0.0)           # open until 1.0
+    br.record_failure(now=0.8)           # in-flight stragglers: until 1.8
+    assert br.tick(1.0) == OPEN
+    assert br.tick(1.8) == HALF_OPEN
+
+
+def test_latency_ewma_stall_trip():
+    br = CircuitBreaker(latency_trip_s=0.5, ewma_alpha=1.0)
+    br.record_success(0.1, now=0.0)
+    assert br.state == CLOSED
+    br.record_success(0.9, now=0.1)      # alpha=1: EWMA == last sample
+    assert br.state == OPEN
+    assert br.last_trip_reason == "latency"
+
+
+def test_no_latency_trip_when_unset():
+    br = CircuitBreaker()                # latency_trip_s=None
+    for i in range(10):
+        br.record_success(100.0, now=float(i))
+    assert br.state == CLOSED
+
+
+def test_clock_is_monotone():
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0)
+    br.tick(5.0)
+    br.record_failure(now=0.0)           # stale now: clock stays at 5.0
+    assert br.tick(5.9) == OPEN          # open until 5.0 + 1.0
+    assert br.tick(6.0) == HALF_OPEN
+
+
+def test_reset_restores_fresh_closed_state():
+    br = CircuitBreaker(failure_threshold=1)
+    br.record_failure(now=0.0)
+    br.reset()
+    assert br.state == CLOSED
+    assert br.trips == 0 and br.consecutive_failures == 0
+    assert br.latency_ewma_s is None
+
+
+def test_snapshot_fields():
+    br = CircuitBreaker(failure_threshold=1)
+    br.record_failure(now=0.0)
+    snap = br.snapshot()
+    assert snap["state"] == OPEN
+    assert snap["trips"] == 1
+    assert snap["last_trip_reason"] == "failures"
+
+
+@pytest.mark.parametrize("kw", [
+    dict(failure_threshold=0), dict(cooldown_s=0.0),
+    dict(latency_trip_s=-1.0), dict(ewma_alpha=0.0), dict(ewma_alpha=1.5),
+])
+def test_constructor_validation(kw):
+    with pytest.raises(ValueError):
+        CircuitBreaker(**kw)
+
+
+# ---------------------------------------------------------------------------
+# routing integration: dispatchable() filtering + degraded capacity
+# ---------------------------------------------------------------------------
+
+def two_tier_qm():
+    tiers = [TierSpec("A", 4, breaker=CircuitBreaker(failure_threshold=1,
+                                                     cooldown_s=1.0)),
+             TierSpec("B", 6)]
+    return QueueManager(tiers), tiers
+
+
+def test_open_breaker_removed_from_dispatchable():
+    qm, tiers = two_tier_qm()
+    assert [t.name for t in dispatchable(tiers)] == ["A", "B"]
+    qm.tier_failure("A", now=0.0)
+    assert [t.name for t in dispatchable(tiers)] == ["B"]
+    assert qm.tripped() == ["A"]
+    # the queue still exists — the breaker gates admission, not drain
+    assert "A" in qm.queues
+
+
+def test_degraded_max_concurrency_tracks_breaker_state():
+    qm, tiers = two_tier_qm()
+    assert qm.degraded_max_concurrency == 10
+    assert qm.max_concurrency == 10
+    qm.tier_failure("A", now=0.0)
+    assert qm.degraded_max_concurrency == 6
+    assert qm.max_concurrency == 10      # the structural contract is intact
+    # recovery: cooldown elapses (half-open) and the probe succeeds
+    tiers[0].breaker.tick(1.0)
+    qm.tier_success("A", 0.01, now=1.1)
+    assert qm.degraded_max_concurrency == 10
+    assert qm.stats.breaker_trips == {"A": 1}
+    assert qm.stats.breaker_recoveries == {"A": 1}
+
+
+def test_tier_failure_counts_backend_error_even_without_breaker():
+    qm = QueueManager([TierSpec("A", 2)])
+    qm.tier_failure("A", now=0.0)
+    assert qm.stats.backend_errors == {"A": 1}
+    assert qm.stats.breaker_trips == {}
+
+
+def test_reset_closes_breakers():
+    qm, tiers = two_tier_qm()
+    qm.tier_failure("A", now=0.0)
+    assert qm.tripped() == ["A"]
+    qm.reset()
+    assert qm.tripped() == []
+    assert tiers[0].breaker.state == CLOSED

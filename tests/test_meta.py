@@ -15,9 +15,10 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-# 368 collected as of PR 5 (sharded DES fan-out + predictive dispatch);
-# small slack so a legitimate parametrization tweak is not a CI incident
-FLOOR = 432
+# 485 collected as of the fault-tolerance PR (deadlines, retry/failover,
+# circuit breaking, chaos fault model); small slack so a legitimate
+# parametrization tweak is not a CI incident
+FLOOR = 485
 
 
 def test_collected_test_count_never_regresses():
