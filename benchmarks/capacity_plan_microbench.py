@@ -1,0 +1,278 @@
+"""Capacity planning under overload and failure: admission + brownout + DES.
+
+WindVE's deployment-cost story (Eqs. 5-6) prices a topology assuming the
+load it was sized for; this bench prices what happens when the load is
+WRONG — a flash crowd several times the calibrated capacity, and an NPU
+that keeps dying mid-crowd — and asserts the overload-control stack earns
+its keep on three fronts:
+
+* **overload A/B/C** — the same flash-crowd trace served by (a) accept-all
+  (unbounded queues, the no-control baseline), (b) reject-only (calibrated
+  Eq. 12 depths, queue-full BUSY), and (c) SLO-aware admission + brownout.
+  Admission+brownout must deliver STRICTLY higher SLO attainment than
+  reject-only AND strictly fewer deadline misses than accept-all — shedding
+  the predictably-late arrivals beats both queuing everything and shedding
+  blindly;
+* **cost curve** — the planner sweeps >= 3 topologies (npu-only, npu+cpu,
+  npu+cpu-w8a8) plus an MTTF-outage arm against flash-crowd and diurnal
+  traces and writes cost-per-million-ACCEPTED-queries; the fault-free
+  curve must be strictly monotone decreasing across the sweep order and
+  the outage arm must be strictly MORE expensive per accepted query than
+  its fault-free twin (failures burn capacity; they must never make an
+  arm look cheaper);
+* **parity** — a same-instant burst through identical admission/brownout
+  controllers on the threaded engine (pinned-GIL submit) and the DES must
+  produce counter-for-counter identical dispatch/rejection/brownout
+  telemetry: overload control lives in the shared core, not per driver.
+
+Self-asserting (CI runs ``--smoke``; a raise exits non-zero) and emits
+machine-readable ``BENCH_capacity_plan.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List
+
+from benchmarks.common import Row, emit, write_bench_json
+from repro.core.admission import AdmissionController
+from repro.core.faults import FaultModel, FaultSchedule
+from repro.core.health import BrownoutController
+from repro.core.planner import PlanArm, PlanPoint, best, calibrated_tiers, \
+    evaluate
+from repro.core.routing import RetryPolicy, TierSpec
+from repro.core.simulator import DeviceModel, ServingSimulator, \
+    diurnal_trace, quantized_model
+from repro.core.windve import ModeledBackend, WindVE
+from repro.data.workload import flash_crowd_trace
+
+SLO_S = 1.0
+DEADLINE_S = 2.0
+REJECT_COST = 0.5
+
+
+def _models() -> Dict[str, DeviceModel]:
+    """Eq. 12 curves: NPU t(C)=0.05+0.01C (depth 95 at the 1s SLO),
+    CPU t(C)=0.10+0.05C (depth 18) — the paper's fast/slow split."""
+    return {"NPU": DeviceModel("npu", beta=0.05, b=0.01, a=0.0),
+            "CPU": DeviceModel("cpu", beta=0.10, b=0.05, a=0.0)}
+
+
+def _arm(name: str, models, price: float, quantized=(), controlled=True,
+         faults=None, retry=None) -> PlanArm:
+    tiers, fits = calibrated_tiers(models, SLO_S, quantized=quantized)
+    return PlanArm(
+        name, tiers=tiers, price_per_s=price,
+        admission=AdmissionController(fits=fits, slo_s=SLO_S,
+                                      reject_cost=REJECT_COST)
+        if controlled else None,
+        brownout=BrownoutController() if controlled else None,
+        deadline_s=DEADLINE_S, faults=faults or {}, retry=retry)
+
+
+def overload_leg(trace) -> Dict[str, PlanPoint]:
+    """A/B/C on identical hardware: the control stack is the only delta."""
+    mdl = _models()
+    cal, _ = calibrated_tiers(mdl, SLO_S, quantized={"CPU"})
+    # accept-all: same devices and batch bound, but queues never say no
+    unbounded = [TierSpec(t.name, 10 ** 6, model=t.model, max_batch=t.depth,
+                          quantized=t.quantized) for t in cal]
+    arms = [
+        PlanArm("accept-all", tiers=unbounded, price_per_s=10.5,
+                deadline_s=DEADLINE_S),
+        _arm("reject-only", _models(), 10.5, quantized=("CPU",),
+             controlled=False),
+        _arm("admission+brownout", _models(), 10.5, quantized=("CPU",)),
+    ]
+    return {a.name: evaluate(a, trace, slo_s=SLO_S, trace_name="flash")
+            for a in arms}
+
+
+def cost_curve_leg(trace, dtrace, horizon_s: float) -> List[PlanPoint]:
+    """The planner's unit-economics sweep, outage arm last."""
+    w8a8 = lambda: {"NPU": _models()["NPU"],
+                    "CPU": quantized_model(_models()["CPU"], 0.6)}
+    sched = FaultSchedule.from_mttf(mttf_s=8.0, mttr_s=2.0,
+                                    horizon_s=horizon_s, seed=7)
+    arms = [
+        _arm("npu-only", {"NPU": _models()["NPU"]}, 10.0),
+        _arm("npu+cpu", _models(), 10.5),
+        _arm("npu+cpu-w8a8", w8a8(), 10.5, quantized=("CPU",)),
+        _arm("npu+cpu-w8a8+outage", w8a8(), 10.5, quantized=("CPU",),
+             faults={"NPU": FaultModel(schedule=sched, fail_latency_s=0.05)},
+             retry=RetryPolicy(max_retries=1, backoff_s=0.0)),
+    ]
+    pts = [evaluate(a, trace, slo_s=SLO_S, trace_name="flash") for a in arms]
+    # diurnal coverage: the winning fault-free topology must also hold the
+    # SLO on a day curve that stays under capacity (sizing is two-sided:
+    # survive the crowd, don't over-reject the ordinary day)
+    pts.append(evaluate(arms[2], dtrace, slo_s=SLO_S, trace_name="diurnal"))
+    return pts
+
+
+def parity_leg():
+    """Identical controllers, identical burst, both drivers."""
+    T0, T1 = "T0", "T1"
+    N, DEPTH = 12, 6
+
+    def models():
+        # flat curves double as exact LatencyFits for the controller
+        return {T0: DeviceModel(T0, beta=0.1, b=0.0, a=0.0),
+                T1: DeviceModel(T1, beta=0.15, b=0.0, a=0.0)}
+
+    def controllers(m):
+        # watermark=0.5 opens 3 of 6 slots per tier: a 12-burst must see
+        # exactly 6 admission rejections; ewma_alpha=1 makes the brownout
+        # stage a pure function of instantaneous utilization (clock-free)
+        adm = AdmissionController(fits=m, slo_s=100.0,
+                                  reject_cost=REJECT_COST, watermark=0.5)
+        bro = BrownoutController(degraded_at=0.3, shedding_at=0.6,
+                                 ewma_alpha=1.0, hysteresis=0.05)
+        return adm, bro
+
+    def counters(t) -> Dict[str, object]:
+        return {"dispatched": dict(t.dispatched), "rejected": t.rejected,
+                "completed": t.n_completed,
+                "rejections": {k: v for k, v in t.rejections.items() if v},
+                "brownout": dict(t.brownout_transitions), "failed": t.failed}
+
+    m = models()
+    adm, bro = controllers(m)
+    sim = ServingSimulator(
+        tiers=[TierSpec(T0, DEPTH, model=m[T0]),
+               TierSpec(T1, DEPTH, model=m[T1], quantized=True)],
+        slo_s=100.0, admission=adm, brownout=bro)
+    des = counters(sim.run([(0.0, 16)] * N))
+
+    m2 = models()
+    adm2, bro2 = controllers(m2)
+    ve = WindVE(
+        tiers=[TierSpec(T0, DEPTH, backend=ModeledBackend(m2[T0],
+                                                          embed_dim=4)),
+               TierSpec(T1, DEPTH, backend=ModeledBackend(m2[T1],
+                                                          embed_dim=4),
+                        quantized=True)],
+        admission=adm2, brownout=bro2)
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(5.0)   # pin the burst: workers drain a static
+    try:                         # backlog exactly like same-instant arrivals
+        futs = [ve.submit(length=16) for _ in range(N)]
+    finally:
+        sys.setswitchinterval(old)
+    done = failed = 0
+    for f in futs:
+        if f is None:
+            continue
+        try:
+            f.result(timeout=10)
+            done += 1
+        except Exception:
+            failed += 1
+    eng = counters(ve.stats)
+    ve.shutdown()
+    return des, eng, done, failed
+
+
+def run(smoke: bool = False) -> list[Row]:
+    if smoke:
+        t1 = flash_crowd_trace(12, 30.0, 6.0, 3, 6, seed=3)
+        t2 = flash_crowd_trace(20, 60.0, 6.0, 5, 12, seed=5)
+        dtr = diurnal_trace(20, 20.0, 80.0, seed=11)
+        horizon = 20.0
+    else:
+        t1 = flash_crowd_trace(20, 30.0, 6.0, 5, 10, seed=3)
+        t2 = flash_crowd_trace(40, 60.0, 6.0, 10, 25, seed=5)
+        dtr = diurnal_trace(40, 20.0, 80.0, seed=11)
+        horizon = 40.0
+    rows: list[Row] = []
+
+    # ---- A/B/C: same hardware, three control stacks ----------------------
+    ab = overload_leg(t1)
+    for p in ab.values():
+        rows.append((f"capacity/overload-{p.arm}", 0.0,
+                     f"attainment={p.slo_attainment:.3f} "
+                     f"misses={p.deadline_misses} accepted={p.accepted} "
+                     f"shed={sum(p.rejections.values())} of "
+                     f"{p.arrivals} arrivals"))
+
+    # ---- cost curve: the planner sweep -----------------------------------
+    pts = cost_curve_leg(t2, dtr, horizon)
+    flash_pts = [p for p in pts if p.trace == "flash"]
+    for p in pts:
+        rows.append((f"capacity/plan-{p.arm}@{p.trace}", 0.0,
+                     f"cost_per_m_accepted={p.cost_per_m_accepted:.0f} "
+                     f"attainment={p.slo_attainment:.3f} "
+                     f"accepted={p.accepted} failed={p.failed}"))
+    pick = best(flash_pts, min_attainment=0.3)
+    rows.append(("capacity/plan-best", 0.0,
+                 f"{pick.arm}: cheapest accepted query at >=0.3 attainment "
+                 f"({pick.cost_per_m_accepted:.0f} per million)"))
+
+    # ---- parity: one control stack, two drivers --------------------------
+    des, eng, done, failed = parity_leg()
+    rows.append(("capacity/parity-des", 0.0,
+                 f"dispatched={des['dispatched']} "
+                 f"rejections={des['rejections']} brownout={des['brownout']}"))
+    rows.append(("capacity/parity-engine", 0.0,
+                 f"dispatched={eng['dispatched']} "
+                 f"rejections={eng['rejections']} brownout={eng['brownout']} "
+                 f"client done={done} admission-rejected={failed}"))
+
+    adm_p, rej_p, all_p = (ab["admission+brownout"], ab["reject-only"],
+                           ab["accept-all"])
+    by_arm = {p.arm: p for p in flash_pts}
+    write_bench_json("capacity_plan", rows, metrics={
+        "overload_attainment_accept_all": all_p.slo_attainment,
+        "overload_attainment_reject_only": rej_p.slo_attainment,
+        "overload_attainment_admission": adm_p.slo_attainment,
+        "overload_misses_accept_all": all_p.deadline_misses,
+        "overload_misses_admission": adm_p.deadline_misses,
+        "admission_rejections": adm_p.rejections.get("admission", 0),
+        "brownout_transitions": sum(
+            adm_p.brownout_transitions.values()),
+        "plan_points": [p.row() for p in pts],
+        "plan_best_arm": pick.arm,
+        "cpm_npu_only": by_arm["npu-only"].cost_per_m_accepted,
+        "cpm_npu_cpu": by_arm["npu+cpu"].cost_per_m_accepted,
+        "cpm_w8a8": by_arm["npu+cpu-w8a8"].cost_per_m_accepted,
+        "cpm_w8a8_outage":
+            by_arm["npu+cpu-w8a8+outage"].cost_per_m_accepted,
+        "parity_ok": des == eng,
+    })
+
+    # regression guards — benchmarks.run turns a raise into exit code 1
+    assert adm_p.slo_attainment > rej_p.slo_attainment, \
+        f"admission+brownout must beat reject-only on SLO attainment " \
+        f"({adm_p.slo_attainment:.3f} vs {rej_p.slo_attainment:.3f})"
+    assert adm_p.deadline_misses < all_p.deadline_misses, \
+        f"admission+brownout must miss fewer deadlines than accept-all " \
+        f"({adm_p.deadline_misses} vs {all_p.deadline_misses})"
+    assert adm_p.rejections.get("admission", 0) > 0, \
+        "the flash crowd triggered no admission rejections: the overload " \
+        "leg proved nothing"
+    assert sum(adm_p.brownout_transitions.values()) >= 1, \
+        "the flash crowd never drove a brownout stage transition"
+    cpms = [by_arm[a].cost_per_m_accepted
+            for a in ("npu-only", "npu+cpu", "npu+cpu-w8a8")]
+    assert cpms[0] > cpms[1] > cpms[2], \
+        f"fault-free cost curve is not strictly monotone decreasing: {cpms}"
+    assert by_arm["npu+cpu-w8a8+outage"].cost_per_m_accepted > cpms[2], \
+        "the MTTF-outage arm looks CHEAPER per accepted query than its " \
+        "fault-free twin — failures are being counted as delivered capacity"
+    dpt = next(p for p in pts if p.trace == "diurnal")
+    assert dpt.slo_attainment >= 0.95, \
+        f"the winning topology over-rejects an under-capacity day curve " \
+        f"(diurnal attainment {dpt.slo_attainment:.3f})"
+    assert des == eng, \
+        f"engine and DES disagree on admission/brownout counters:\n" \
+        f"  des={des}\n  eng={eng}"
+    assert failed == eng["rejections"].get("admission", 0), \
+        "every admission rejection must surface as a failed client future"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast run (CI)")
+    args = ap.parse_args()
+    emit(run(smoke=args.smoke))

@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.quant_embed_microbench",    # int8 weight-only CPU tier
     "benchmarks.cache_microbench",  # zero-cost exact-match cache tier
     "benchmarks.chaos_microbench",  # fault tolerance: serve through outage
+    "benchmarks.capacity_plan_microbench",  # overload control + planner
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 

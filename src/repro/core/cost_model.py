@@ -151,6 +151,43 @@ def expected_capacity(depths: "dict[str, int]",
     return sum(d * avail.get(name, 1.0) for name, d in depths.items())
 
 
+def cost_per_million_queries(price_per_s: float, horizon_s: float,
+                             accepted: int) -> float:
+    """The planner's headline unit economics: what one million *accepted*
+    queries cost on a topology priced at ``price_per_s`` over a serving
+    window of ``horizon_s`` in which it accepted ``accepted`` queries.
+
+    Accepted — not offered — is the denominator the paper's deployment
+    argument implies: a topology that rejects half its arrivals under a
+    flash crowd pays full price for half the work, which is exactly the
+    signal a sizing sweep must surface.  A window that accepted nothing
+    costs infinity per query (the topology is pure waste at this load).
+    """
+    if price_per_s < 0:
+        raise ValueError("price_per_s must be >= 0")
+    if horizon_s <= 0:
+        raise ValueError("horizon_s must be positive")
+    if accepted < 0:
+        raise ValueError("accepted must be >= 0")
+    if accepted == 0:
+        return math.inf
+    return price_per_s * horizon_s / accepted * 1e6
+
+
+def overload_shed_fraction(arrival_rate: float, capacity_rate: float) -> float:
+    """Lower bound on the fraction of arrivals ANY loss system must turn
+    away at steady state: ``max(0, 1 - capacity/arrivals)``.  An admission
+    controller cannot beat this bound — it can only choose *which* queries
+    make up the shed fraction (the predictably-late ones) instead of
+    letting the queue choose (the unlucky ones, after wasting device time
+    on them)."""
+    if arrival_rate <= 0:
+        raise ValueError("arrival_rate must be positive")
+    if capacity_rate < 0:
+        raise ValueError("capacity_rate must be >= 0")
+    return max(0.0, 1.0 - capacity_rate / arrival_rate)
+
+
 def concurrency_uplift_bound(alpha_npu: float, alpha_cpu: float) -> float:
     """Ineq. 19: C_CPU/C_NPU < alpha_NPU/alpha_CPU — the uplift is bounded by
     the device performance-gap ratio."""

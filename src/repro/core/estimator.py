@@ -120,6 +120,22 @@ def fanout_probe_points(devices: int,
     return tuple(d * int(c) for c in base)
 
 
+def fit_from_model(model, probe_points: Sequence[int] = (1, 4, 16, 64),
+                   length: int = 75) -> LatencyFit:
+    """Eq. 12 fit of any ``latency(concurrency, length)`` curve — a DES
+    ``DeviceModel``/``FanOutModel`` probed noise-free.
+
+    This is how the capacity planner (and its admission controllers) get
+    service pricing that is *consistent with the simulator they run in*:
+    the same object the DES samples batch latencies from yields the fit
+    ``AdmissionController``/``PredictivePolicy`` price against, so a
+    planner verdict never hinges on two divergent calibrations.
+    """
+    pts = [(int(c), float(model.latency(int(c), length)))
+           for c in probe_points]
+    return fit_latency([p[0] for p in pts], [p[1] for p in pts])
+
+
 def estimate_depth(profile_fn: Callable[[int], float], slo_s: float,
                    probe_points: Sequence[int] = (1, 4, 16, 64),
                    ) -> Tuple[int, LatencyFit]:

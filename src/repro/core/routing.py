@@ -35,6 +35,7 @@ from typing import (Any, Callable, Deque, Dict, Iterable, List, Optional,
                     Sequence, Union)
 
 from repro.core.health import CLOSED as BREAKER_CLOSED
+from repro.core.health import NORMAL as BROWNOUT_NORMAL
 from repro.core.health import OPEN as BREAKER_OPEN
 from repro.core.telemetry import Telemetry
 
@@ -44,6 +45,10 @@ BUSY = "BUSY"
 # dispatch verdict for a query already past its deadline on arrival (or on a
 # retry re-dispatch): it never enters a queue and never reaches a device
 EXPIRED = "EXPIRED"
+# dispatch verdict for a query the admission controller turned away (priced
+# as a predictable SLO miss, or over every tier's backpressure watermark):
+# rejected at arrival, it never occupies a queue slot
+ADMISSION = "ADMISSION"
 # pseudo-tier key for deadline misses detected at dispatch time (the query
 # was never queued on any tier, so no tier owns the miss)
 ARRIVAL = "arrival"
@@ -57,8 +62,11 @@ class ServeError(RuntimeError):
     ``"deadline"`` (see :class:`DeadlineExceeded`), ``"worker_death"`` (the
     tier's last worker thread died with this query stranded in its queue),
     ``"no_capacity"`` (re-dispatch after a failure found every surviving
-    tier full).  ``attempts`` is how many re-dispatches were burned and
-    ``cause`` the last underlying exception (None for deadline misses).
+    tier full), ``"admission"`` (the admission controller shed the query —
+    at arrival it is a rejection, not a terminal serving failure; on a
+    retry re-dispatch it is terminal).  ``attempts`` is how many
+    re-dispatches were burned and ``cause`` the last underlying exception
+    (None for deadline misses).
     """
 
     def __init__(self, kind: str, tier: Optional[str] = None,
@@ -250,6 +258,11 @@ class TierSpec:
     ``QueueManager.tier_success`` / ``tier_failure`` and a tripped (open)
     breaker removes the tier from :func:`dispatchable`, so every policy
     transparently routes around it until its half-open probe recovers.
+
+    ``quantized`` marks a reduced-precision (W8A8/int8) tier: under
+    brownout degradation the candidate re-rank prefers quantized tiers at
+    equal backlog — quality is shed before queries are (see
+    ``repro.core.health.BrownoutController.reorder``).  Inert otherwise.
     """
 
     name: str
@@ -261,6 +274,7 @@ class TierSpec:
     bucket_fn: Optional[Callable[[Query], Any]] = None
     cache: Any = None
     breaker: Any = None
+    quantized: bool = False
 
 
 def device_tiers(tiers: Sequence[TierSpec]) -> List[TierSpec]:
@@ -474,7 +488,9 @@ class QueueManager:
                  cpu_depth: int = 0, heter_enable: bool = True, *,
                  npu_depth: Optional[int] = None,
                  policy: Optional[DispatchPolicy] = None,
-                 stats: Optional[Telemetry] = None):
+                 stats: Optional[Telemetry] = None,
+                 admission: Any = None,
+                 brownout: Any = None):
         if npu_depth is not None:           # legacy keyword form
             tiers = npu_depth
         if isinstance(tiers, int):          # legacy positional form
@@ -500,6 +516,15 @@ class QueueManager:
         self.queues: Dict[str, BoundedQueue] = {
             t.name: BoundedQueue(t.depth) for t in device_tiers(self.tiers)}
         self.stats: Telemetry = stats if stats is not None else Telemetry()
+        # overload control (both optional): an
+        # ``repro.core.admission.AdmissionController`` consulted after the
+        # cache tiers and before policy dispatch, and a
+        # ``repro.core.health.BrownoutController`` whose utilization EWMA
+        # is fed every arrival and whose stage reorders candidates /
+        # tightens deadlines under overload
+        self.admission = admission
+        self.brownout = brownout
+        self._brownout_stage = BROWNOUT_NORMAL
         # driver hook: called (outside the queue lock) for every queued
         # query the deadline sweep expires — the engine fails its future
         # with DeadlineExceeded; the DES needs no action beyond telemetry
@@ -516,15 +541,19 @@ class QueueManager:
         return any(t.name == name for t in self.cache_tiers)
 
     def dispatch(self, query: Query, now: Optional[float] = None) -> str:
-        """Route one query.  Returns the admitting tier's name, BUSY, or
-        EXPIRED (already past its deadline — it never enters a queue).
+        """Route one query.  Returns the admitting tier's name, BUSY,
+        EXPIRED (already past its deadline — it never enters a queue), or
+        ADMISSION (shed by the admission controller at arrival).
 
         Cache tiers are consulted first, in topology order: an exact-match
         hit fills ``query.emb``, counts as a dispatch to (and completion
         responsibility of) the cache tier, and never touches a device queue
         — the driver must complete the query immediately (zero service
         time).  Misses record per-tier miss telemetry and fall through to
-        normal policy dispatch.  ``now`` defaults to ``query.arrival_t``
+        overload control, then normal policy dispatch.  Cache hits are
+        served at EVERY brownout stage and are never subject to admission:
+        they cost nothing, which is exactly what an overloaded system
+        wants to serve.  ``now`` defaults to ``query.arrival_t``
         (the lookup clock for cache staleness and the breaker clock under
         both drivers: monotonic / sim time); retry re-dispatch passes the
         current clock explicitly since ``arrival_t`` is then stale.
@@ -534,6 +563,7 @@ class QueueManager:
         with self._lock:
             if query.expired(now):
                 self.stats.record_deadline_miss(ARRIVAL)
+                self.stats.record_rejection("expired")
                 return EXPIRED
             # advance every breaker's clock: open tiers whose cooldown has
             # elapsed become half-open (dispatchable again) on THIS
@@ -551,15 +581,47 @@ class QueueManager:
                         ct.name, max(0.0, now - entry.t))
                     return ct.name
                 self.stats.record_cache_miss(ct.name)
-            for name in self.policy.candidates(query, self.tiers, self):
+            stage = BROWNOUT_NORMAL
+            if self.brownout is not None:
+                stage = self.brownout.observe(self.utilization(), now)
+                if stage != self._brownout_stage:
+                    self.stats.record_brownout(stage)
+                    self._brownout_stage = stage
+                # degraded/shedding: tighten the remaining deadline budget
+                # so queued work that cannot finish in time expires early
+                query.deadline = self.brownout.tighten(query.deadline, now)
+            allowed = None
+            if self.admission is not None:
+                allowed = self.admission.decide(
+                    query, self.tiers, self, now, stage)
+                if allowed is None:
+                    self.stats.record_rejection("admission")
+                    return ADMISSION
+            names = self.policy.candidates(query, self.tiers, self)
+            if self.brownout is not None:
+                names = self.brownout.reorder(list(names), self)
+            for name in names:
                 if name not in self.queues:     # custom policies may emit
                     continue                    # cache-tier names: skip
+                if allowed is not None and name not in allowed:
+                    continue                    # over its watermark
                 if self.queues[name].push(query):
                     query.device = name
                     self.stats.record_dispatch(name)
                     return name
             self.stats.record_busy()
             return BUSY
+
+    def utilization(self) -> float:
+        """Live load fraction: queued + in-flight over the dispatchable
+        capacity (the paper's C summed over reachable tiers).  1.0 when no
+        capacity is reachable — a fully-tripped topology IS overloaded."""
+        cap = self.degraded_max_concurrency
+        if cap <= 0:
+            return 1.0
+        load = sum(len(self.queues[t.name]) for t in dispatchable(self.tiers)
+                   if t.name in self.queues)
+        return load / cap
 
     # -- fault-tolerance bridges (drivers -> breaker + telemetry) ----------
     def tier_success(self, device: str, service_s: float, now: float) -> None:
@@ -681,6 +743,9 @@ class QueueManager:
             for t in self.tiers:
                 if t.breaker is not None:
                     t.breaker.reset()
+            if self.brownout is not None:
+                self.brownout.reset()
+            self._brownout_stage = BROWNOUT_NORMAL
             self.stats = stats if stats is not None else Telemetry()
         return self.stats
 

@@ -27,8 +27,9 @@ import random
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.routing import (BUSY, CPU, EXPIRED, NPU, DispatchPolicy,
-                                Query, QueueManager, RetryPolicy, TierSpec)
+from repro.core.routing import (ADMISSION, BUSY, CPU, EXPIRED, NPU,
+                                DispatchPolicy, Query, QueueManager,
+                                RetryPolicy, TierSpec)
 from repro.core.telemetry import SimResult, Telemetry
 
 
@@ -272,7 +273,12 @@ class ServingSimulator:
       — the DES-side injector matching the engine's ``FaultyBackend``
       (same ordinal-plan / wall-time-schedule vocabularies);
     * a ``TierSpec.breaker`` trips/recovers on the simulated clock via the
-      same ``QueueManager.tier_success`` / ``tier_failure`` bridges.
+      same ``QueueManager.tier_success`` / ``tier_failure`` bridges;
+    * ``admission`` / ``brownout`` plug the engine's overload controllers
+      (:class:`~repro.core.admission.AdmissionController`,
+      :class:`~repro.core.health.BrownoutController`) into the shared
+      ``QueueManager`` — the capacity planner (``repro.core.planner``)
+      sweeps them against load and outage traces.
     """
 
     def __init__(self, npu: Optional[DeviceModel] = None,
@@ -283,7 +289,9 @@ class ServingSimulator:
                  policy: Optional[DispatchPolicy] = None,
                  retry: Optional[RetryPolicy] = None,
                  deadline_s: Optional[float] = None,
-                 faults: Optional[Dict[str, "object"]] = None):
+                 faults: Optional[Dict[str, "object"]] = None,
+                 admission: "object" = None,
+                 brownout: "object" = None):
         if tiers is None:
             if npu is None:
                 raise ValueError("need an NPU model or an explicit tier list")
@@ -295,7 +303,8 @@ class ServingSimulator:
             if t.model is None and t.cache is None:
                 raise ValueError(f"tier {t.name!r} has no DeviceModel")
         self.qm = QueueManager(tiers, policy=policy,
-                               stats=Telemetry(slo=slo_s))
+                               stats=Telemetry(slo=slo_s),
+                               admission=admission, brownout=brownout)
         self.slo = slo_s
         self.length = query_length
         self.rng = random.Random(seed)
@@ -413,8 +422,11 @@ class ServingSimulator:
                     continue
                 res.record_retry(tier)
                 verdict = self.qm.dispatch(q, now=now)
-                if verdict == BUSY:
-                    res.record_failed()     # no surviving capacity
+                if verdict == BUSY or verdict == ADMISSION:
+                    # no surviving capacity / admission shed a retry that
+                    # already burned device time — terminal either way
+                    # (mirror of the engine's _retry_or_fail)
+                    res.record_failed()
                     continue
                 if self.qm.is_cache_tier(verdict):
                     q.done_t = now
@@ -430,6 +442,10 @@ class ServingSimulator:
             if kind == "arrive":
                 verdict = self.qm.dispatch(obj)
                 if verdict == BUSY:
+                    continue
+                if verdict == ADMISSION:
+                    # shed at arrival: a rejection (rejections_admission),
+                    # not a terminal failure — same as the engine's submit
                     continue
                 if verdict == EXPIRED:
                     res.record_failed()

@@ -53,6 +53,13 @@ class Telemetry:
     breaker_recoveries: Dict[str, int] = field(default_factory=dict)
     failed: int = 0              # queries whose futures terminally failed
     hook_errors: int = 0         # batch hooks that raised (and were caught)
+    # overload-control counters: rejections broken down by reason
+    # ("no_capacity" = classic BUSY, "admission" = priced/watermark shed,
+    # "expired" = dead on arrival at dispatch) and brownout stage
+    # transitions keyed by the stage entered — all empty on a run that
+    # never rejected, and omitted from summary() then
+    rejections: Dict[str, int] = field(default_factory=dict)
+    brownout_transitions: Dict[str, int] = field(default_factory=dict)
     # set by WindVE.shutdown(): False when a worker thread failed to join
     # (leaked); None until shutdown (and always None for the DES)
     clean_shutdown: Optional[bool] = None
@@ -78,6 +85,22 @@ class Telemetry:
     def record_busy(self) -> None:
         with self._lock:
             self.busy += 1
+            self.rejections["no_capacity"] = \
+                self.rejections.get("no_capacity", 0) + 1
+
+    def record_rejection(self, reason: str) -> None:
+        """One arrival turned away for ``reason`` (``admission`` /
+        ``expired``; ``no_capacity`` is written by :meth:`record_busy` so
+        the legacy ``rejected == busy`` reader stays exact)."""
+        with self._lock:
+            self.rejections[reason] = self.rejections.get(reason, 0) + 1
+
+    def record_brownout(self, stage: str) -> None:
+        """The brownout controller entered ``stage`` (counted per stage
+        entered, so ``brownout_transitions`` reads as a transition log)."""
+        with self._lock:
+            self.brownout_transitions[stage] = \
+                self.brownout_transitions.get(stage, 0) + 1
 
     def record_truncations(self, n: int) -> None:
         """Queries whose payload was cut to the backend's max_tokens: the
@@ -173,6 +196,11 @@ class Telemetry:
         return self.busy
 
     @property
+    def admission_rejected(self) -> int:
+        """Arrivals shed by the admission controller (priced / watermark)."""
+        return self.rejections.get("admission", 0)
+
+    @property
     def to_npu(self) -> int:      # legacy DispatchStats field
         return self.dispatched.get("NPU", 0)
 
@@ -240,7 +268,10 @@ class Telemetry:
         retry, backend error, breaker transition, terminal failure, hook
         error), the fault counters join it too (omitted entirely on
         fault-free cache-less runs so existing consumers see an unchanged
-        shape).  ``clean_shutdown`` appears once the engine has shut down:
+        shape).  The same invariant holds for overload control:
+        per-reason ``rejections_*`` and per-stage ``brownout_to_*`` keys
+        join the record only when a rejection or brownout transition
+        actually happened.  ``clean_shutdown`` appears once the engine has shut down:
         1.0 when every worker thread joined, 0.0 when one leaked."""
         fault: Dict[str, float] = {}
         if (self.deadline_misses or self.retries or self.backend_errors
@@ -261,6 +292,12 @@ class Telemetry:
             }
         if self.clean_shutdown is not None:
             fault["clean_shutdown"] = float(self.clean_shutdown)
+        overload: Dict[str, float] = {}
+        if any(self.rejections.values()) or self.brownout_transitions:
+            overload = {f"rejections_{k}": v
+                        for k, v in sorted(self.rejections.items()) if v}
+            overload.update({f"brownout_to_{k}": v for k, v in
+                             sorted(self.brownout_transitions.items())})
         cache: Dict[str, float] = {}
         if self.cache_hits or self.cache_misses or self.cache_inserts:
             cache = {
@@ -277,6 +314,7 @@ class Telemetry:
             }
         return {
             **fault,
+            **overload,
             **cache,
             "accepted": self.accepted,
             "rejected": self.rejected,

@@ -29,14 +29,15 @@ import threading
 import time
 import warnings
 from concurrent.futures import Future
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import estimator
-from repro.core.routing import (BUSY, CPU, EXPIRED, NPU, DeadlineExceeded,
-                                DispatchPolicy, Query, QueueManager,
-                                RetryPolicy, ServeError, TierSpec)
+from repro.core.routing import (ADMISSION, BUSY, CPU, EXPIRED, NPU,
+                                DeadlineExceeded, DispatchPolicy, Query,
+                                QueueManager, RetryPolicy, ServeError,
+                                TierSpec)
 from repro.core.simulator import DeviceModel, sharded_model
 from repro.core.telemetry import EngineStats, Telemetry
 
@@ -255,6 +256,15 @@ class WindVE:
     overrides); a ``TierSpec.breaker`` makes dispatch route around a tier
     that keeps failing or stalling.  Terminal failures surface on client
     futures as structured :class:`~repro.core.routing.ServeError`.
+
+    Overload control: ``admission`` (an
+    :class:`~repro.core.admission.AdmissionController`) sheds predictably
+    late arrivals with ``ServeError(kind="admission")`` futures before they
+    occupy a queue slot; ``brownout`` (a
+    :class:`~repro.core.health.BrownoutController`) degrades quality —
+    quantized-tier preference, tightened deadlines — before anything is
+    shed.  Both live in the shared ``QueueManager``, so the DES replays
+    the identical decisions.
     """
 
     def __init__(self, npu_backend: Optional[Backend] = None,
@@ -266,7 +276,9 @@ class WindVE:
                  tiers: Optional[Sequence[TierSpec]] = None,
                  policy: Optional[DispatchPolicy] = None,
                  retry: Optional[RetryPolicy] = None,
-                 default_deadline_s: Optional[float] = None):
+                 default_deadline_s: Optional[float] = None,
+                 admission: Any = None,
+                 brownout: Any = None):
         if tiers is None:
             tiers = self._legacy_tiers(npu_backend, cpu_backend, npu_depth,
                                        cpu_depth, heter_enable,
@@ -283,7 +295,8 @@ class WindVE:
         # keep_queries=False: a long-running engine must not pin every
         # Query (and its payload) forever; all metrics read `latencies`
         self.qm = QueueManager(tiers, policy=policy,
-                               stats=Telemetry(keep_queries=False))
+                               stats=Telemetry(keep_queries=False),
+                               admission=admission, brownout=brownout)
         self.stats: EngineStats = self.qm.stats   # one shared Telemetry
         self.backends: Dict[str, Backend] = {t.name: t.backend
                                              for t in device_tiers}
@@ -378,6 +391,14 @@ class WindVE:
         if verdict == EXPIRED:
             self._fail(q, DeadlineExceeded(qid=q.qid, attempts=q.attempts))
             return fut
+        if verdict == ADMISSION:
+            # admission shed at arrival is a REJECTION (rejections_admission
+            # counts it), not a terminal serving failure — the future
+            # carries the structured error but `failed` stays untouched,
+            # mirroring how BUSY rejections never count as failed
+            self._futures.pop(q.qid, None)
+            fut.set_exception(ServeError("admission", qid=q.qid))
+            return fut
         if self.qm.is_cache_tier(verdict):
             # zero-latency tier: the hit already filled q.emb at dispatch —
             # complete here, no queue slot, no worker, no batch
@@ -457,6 +478,12 @@ class WindVE:
             verdict = self.qm.dispatch(q, now=now)
             if verdict == BUSY:
                 self._fail(q, ServeError("no_capacity", tier=tier_name,
+                                         qid=q.qid, attempts=q.attempts,
+                                         cause=cause))
+            elif verdict == ADMISSION:
+                # on a retry re-dispatch the shed IS terminal: the query
+                # already burned device time, so it ends as failed
+                self._fail(q, ServeError("admission", tier=tier_name,
                                          qid=q.qid, attempts=q.attempts,
                                          cause=cause))
             elif verdict == EXPIRED:

@@ -8,8 +8,9 @@ lengths; Fig. 2 diurnal rate curve lives in core.simulator.diurnal_trace).
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -108,3 +109,40 @@ def zipf_queries(n: int, vocab: int, alpha: float = 1.1, unique: int = 64,
     p /= p.sum()
     idx = rng.choice(unique, size=n, p=p)
     return [pool[i] for i in idx]
+
+
+def flash_crowd_trace(n_seconds: int, base_rate: float, burst_mult: float,
+                      burst_start: float, burst_len: float,
+                      length: int = 75, seed: int = 0
+                      ) -> List[Tuple[float, int]]:
+    """Flash-crowd arrival trace: baseline Poisson with a seeded
+    multiplicative burst window — the overload scenario admission control
+    and the capacity planner are sized against.
+
+    Arrivals follow a Poisson process at ``base_rate`` queries/s, except
+    inside ``[burst_start, burst_start + burst_len)`` where the rate is
+    ``base_rate * burst_mult`` (a link on the front page, a retry storm, a
+    failover from a sibling cluster).  Returns sorted ``(time, length)``
+    pairs ready for ``ServingSimulator.run`` — same shape as
+    ``simulator.diurnal_trace``, and fully deterministic in ``seed`` like
+    ``zipf_queries`` so planner sweeps and CI replays see the same crowd.
+    """
+    if n_seconds < 0:
+        raise ValueError("n_seconds must be >= 0")
+    if base_rate < 0:
+        raise ValueError("base_rate must be >= 0")
+    if burst_mult < 1.0:
+        raise ValueError("burst_mult must be >= 1 (1 == no burst)")
+    if burst_len < 0:
+        raise ValueError("burst_len must be >= 0")
+    from repro.core.simulator import poisson  # core stays import-light here
+    rng = random.Random(seed)
+    out: List[Tuple[float, int]] = []
+    for s in range(int(n_seconds)):
+        rate = base_rate
+        if burst_start <= s < burst_start + burst_len:
+            rate *= burst_mult
+        for _ in range(poisson(rng, rate)):
+            out.append((s + rng.random(), length))
+    out.sort()
+    return out

@@ -35,12 +35,13 @@ import numpy as np
 from repro import perf_flags
 from repro.configs import get_config
 from repro.core import adaptive
+from repro.core.admission import AdmissionController
 from repro.core.bucketing import length_bucket_fn
 from repro.core.cache import cache_tier
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import (estimate_depth, estimate_depth_per_bucket,
                                   fanout_probe_points)
-from repro.core.health import CircuitBreaker
+from repro.core.health import BrownoutController, CircuitBreaker
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, PredictivePolicy, Query,
                                 RetryPolicy, TierSpec)
@@ -195,8 +196,31 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
         print(f"[serve] fault tolerance: retries={flags.retries} "
               f"backoff={flags.retry_backoff_ms}ms "
               f"deadline={flags.deadline_ms or 'none'}ms")
+    # --opt admission=on[,reject_cost=X,watermark=N] + brownout=on: the
+    # overload-control pair.  Quantized serving paths mark their tier so
+    # brownout degradation can prefer them at equal backlog.
+    if flags.embed_dtype.startswith("int8"):
+        for t in tiers:
+            if t.cache is None and t.backend is cpu_be:
+                t.quantized = True
+    admission = None
+    if flags.admission:
+        admission = AdmissionController(
+            fits={NPU: fit_n, **({CPU: fit_c} if fit_c else {})},
+            slo_s=slo, reject_cost=flags.reject_cost,
+            watermark=flags.watermark)
+        print(f"[serve] admission control: reject_cost={flags.reject_cost} "
+              f"watermark={flags.watermark} "
+              f"(priced against the calibrated Eq. 12 fits)")
+    brownout = None
+    if flags.brownout:
+        brownout = BrownoutController()
+        print(f"[serve] brownout: degraded@{brownout.degraded_at} "
+              f"shedding@{brownout.shedding_at} "
+              f"deadline_scale={brownout.deadline_scale}")
     engine = WindVE(tiers=tiers, policy=policy_obj, retry=retry,
-                    default_deadline_s=deadline_s)
+                    default_deadline_s=deadline_s,
+                    admission=admission, brownout=brownout)
     if policy == "predictive":
         # live fits: every completed batch feeds the calibrator; every refit
         # streams fresh per-tier (and per-bucket) curves into the policy
@@ -224,7 +248,9 @@ def main() -> None:
                          "puts an N-entry exact-match embedding cache at "
                          "the head of the dispatch topology); fault "
                          "tolerance: deadline_ms=N,retries=N,"
-                         "retry_backoff_ms=N,breaker=N,breaker_cooldown_ms=N")
+                         "retry_backoff_ms=N,breaker=N,breaker_cooldown_ms=N"
+                         "; overload control: admission=on,reject_cost=X,"
+                         "watermark=N,brownout=on")
     ap.add_argument("--devices", type=int, default=0,
                     help="devices the embed tier fans out over (0 = all)")
     ap.add_argument("--npu-devices", type=int, default=1,
@@ -256,6 +282,13 @@ def main() -> None:
     print(f"[serve] {args.queries} queries in {wall:.2f}s: "
           f"accepted={s.accepted} rejected(BUSY)={s.rejected} "
           f"completed={len(done)} failed={len(failures)}")
+    if any(s.rejections.values()) or s.brownout_transitions:
+        rej = " ".join(f"{k}={v}" for k, v in sorted(s.rejections.items())
+                       if v)
+        bro = " ".join(f"->{k}x{v}" for k, v in
+                       sorted(s.brownout_transitions.items()))
+        print(f"[serve] overload: rejections {rej or 'none'}"
+              + (f"  brownout {bro}" if bro else ""))
     if failures or s.deadline_misses or s.backend_errors or s.retries:
         print(f"[serve] faults: deadline_misses="
               f"{sum(s.deadline_misses.values())} "

@@ -119,6 +119,27 @@ class PerfFlags:
     # stays open before the half-open recovery probe.  Only meaningful
     # with breaker > 0.
     breaker_cooldown_ms: int = 1000
+    # serving overload control: SLO-aware admission at dispatch — arrivals
+    # a calibrated fit predicts past their budget, or over every tier's
+    # backpressure watermark, are rejected with ServeError(kind="admission")
+    # instead of queueing into a guaranteed deadline miss (off = baseline:
+    # queue until BUSY).
+    admission: bool = False
+    # serving overload control: the admission price of turning a query
+    # away, against an expected SLO-violation cost of 1.0 — reject when
+    # rejecting is cheaper (reject_cost < 1.0); >= 1.0 disables pricing
+    # rejections outside brownout shedding, leaving watermarks only.
+    reject_cost: float = 0.5
+    # serving overload control: fraction of each tier's depth open to NEW
+    # arrivals (1.0 = full depth); the band above the watermark stays
+    # reserved for retry/failover re-dispatch.  Halved under brownout
+    # shedding.
+    watermark: float = 1.0
+    # serving overload control: three-stage brownout (normal -> degraded ->
+    # shedding) on a dispatch-time utilization EWMA — degraded prefers the
+    # quantized tier at equal backlog and tightens effective deadlines,
+    # shedding also tightens the admission watermark.  Off = baseline.
+    brownout: bool = False
 
 
 FLAGS = PerfFlags()
@@ -147,10 +168,12 @@ def parse_opt(spec: str) -> dict:
         field = PerfFlags.__dataclass_fields__[k]
         if field.type in ("int", int):
             out[k] = int(v)
+        elif field.type in ("float", float):
+            out[k] = float(v)
         elif field.type in ("str", str):
             out[k] = v.strip()
         else:
-            out[k] = v.strip() in ("1", "true", "True", "yes")
+            out[k] = v.strip() in ("1", "true", "True", "yes", "on")
         if k == "embed_dtype":
             # validate the VALUE here too: a typo'd policy must fail at the
             # CLI, not at first backend construction minutes into a run

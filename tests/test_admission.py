@@ -1,0 +1,415 @@
+"""SLO-aware admission control + brownout: units and dispatch integration.
+
+Covers the overload-control stack end to end at the unit level:
+``AdmissionController`` (watermark math, SLO-violation pricing, rejection
+economics), ``BrownoutController`` (stage machine, hysteresis, deadline
+tightening, quantized-tier re-rank), their wiring into
+``QueueManager.dispatch`` (the ADMISSION verdict, rejection-reason
+telemetry, cache-hits-always-served), the engine's client-visible
+``ServeError(kind="admission")``, and engine-vs-DES counter parity on a
+seeded overload plan.  The bench (``benchmarks/capacity_plan_microbench``)
+asserts the macro behaviour; these tests pin the mechanisms.
+"""
+import sys
+
+import pytest
+
+from repro.core.admission import AdmissionController
+from repro.core.cache import cache_tier
+from repro.core.health import (DEGRADED, NORMAL, SHEDDING,
+                               BrownoutController)
+from repro.core.routing import (ADMISSION, BUSY, Query, QueueManager,
+                                ServeError, TierSpec)
+from repro.core.simulator import DeviceModel, ServingSimulator
+from repro.core.windve import ModeledBackend, WindVE
+
+T0, T1 = "T0", "T1"
+
+
+def flat_models(b0=0.1, b1=0.15):
+    """Flat service curves double as exact LatencyFits for the controller."""
+    return {T0: DeviceModel(T0, beta=b0, b=0.0, a=0.0),
+            T1: DeviceModel(T1, beta=b1, b=0.0, a=0.0)}
+
+
+def make_qm(depths=(4, 4), models=None, **kw):
+    models = models or flat_models()
+    tiers = [TierSpec(T0, depths[0], model=models[T0]),
+             TierSpec(T1, depths[1], model=models[T1], quantized=True)]
+    return QueueManager(tiers, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController units
+# ---------------------------------------------------------------------------
+
+class TestWatermarkSlots:
+    def test_fraction_floors(self):
+        adm = AdmissionController(watermark=0.5)
+        assert adm.watermark_slots(6) == 3
+        assert adm.watermark_slots(7) == 3
+
+    def test_full_watermark_is_full_depth(self):
+        assert AdmissionController().watermark_slots(8) == 8
+
+    def test_at_least_one_slot_for_usable_tier(self):
+        assert AdmissionController(watermark=0.01).watermark_slots(10) == 1
+
+    def test_depth_zero_tier_has_zero_slots(self):
+        assert AdmissionController(watermark=0.5).watermark_slots(0) == 0
+
+    def test_shedding_tightens_by_shed_scale(self):
+        adm = AdmissionController(watermark=1.0, shed_scale=0.5)
+        assert adm.watermark_slots(8, stage=SHEDDING) == 4
+        assert adm.watermark_slots(8, stage=NORMAL) == 8
+
+    def test_no_float_cliff(self):
+        # 10 * 0.3 is 2.9999...: the epsilon must keep the floor at 3
+        assert AdmissionController(watermark=0.3).watermark_slots(10) == 3
+
+
+class TestAdmissionValidation:
+    @pytest.mark.parametrize("kw", [dict(slo_s=0), dict(reject_cost=-1),
+                                    dict(violation_cost=0),
+                                    dict(watermark=0), dict(watermark=1.5),
+                                    dict(shed_scale=0)])
+    def test_rejects_bad_config(self, kw):
+        with pytest.raises(ValueError):
+            AdmissionController(**kw)
+
+
+class TestDecide:
+    def test_under_capacity_admits_everywhere(self):
+        m = flat_models()
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=m, slo_s=100.0)
+        got = adm.decide(Query(qid=0), qm.tiers, qm, now=0.0)
+        assert got == {T0, T1}
+
+    def test_over_watermark_rejects_while_hard_slots_remain(self):
+        m = flat_models()
+        qm = make_qm(depths=(4, 4), models=m)
+        adm = AdmissionController(fits=m, slo_s=100.0, watermark=0.5)
+        for i in range(2):           # fill both tiers to their watermark (2)
+            qm.queues[T0].push(Query(qid=i))
+            qm.queues[T1].push(Query(qid=10 + i))
+        assert adm.decide(Query(qid=9), qm.tiers, qm, now=0.0) is None
+
+    def test_hard_full_falls_through_to_busy(self):
+        m = flat_models()
+        qm = make_qm(depths=(1, 1), models=m)
+        adm = AdmissionController(fits=m, slo_s=100.0)
+        for i in range(2):
+            qm.dispatch(Query(qid=i))
+        # empty set: dispatch's push loop reports the classic no_capacity
+        assert adm.decide(Query(qid=9), qm.tiers, qm, now=0.0) == set()
+
+    def test_predictably_late_is_rejected_when_rejection_is_cheaper(self):
+        m = flat_models(b0=2.0, b1=3.0)     # every tier predicts past 1s
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=m, slo_s=1.0, reject_cost=0.5)
+        assert adm.decide(Query(qid=0), qm.tiers, qm, now=0.0) is None
+
+    def test_pricing_disabled_when_rejection_costs_more(self):
+        m = flat_models(b0=2.0, b1=3.0)
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=m, slo_s=1.0, reject_cost=1.0)
+        # reject_cost >= violation_cost: serving late is the cheaper bet
+        assert adm.decide(Query(qid=0), qm.tiers, qm, now=0.0) == {T0, T1}
+
+    def test_shedding_stage_forces_pricing_rejection(self):
+        m = flat_models(b0=2.0, b1=3.0)
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=m, slo_s=1.0, reject_cost=1.0)
+        assert adm.decide(Query(qid=0), qm.tiers, qm, now=0.0,
+                          stage=SHEDDING) is None
+
+    def test_unfitted_tier_is_optimistic(self):
+        m = flat_models(b0=2.0, b1=3.0)
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits={T0: m[T0]}, slo_s=1.0,
+                                  reject_cost=0.5)
+        # T1 has no fit: calibration earns the right to reject, so admit
+        assert adm.decide(Query(qid=0), qm.tiers, qm, now=0.0) == {T0, T1}
+
+    def test_deadline_tightens_the_budget(self):
+        m = flat_models(b0=0.5, b1=0.6)     # fine for the 1s SLO...
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=m, slo_s=1.0, reject_cost=0.5)
+        q = Query(qid=0, deadline=0.2)      # ...but not for 0.2s remaining
+        assert adm.decide(q, qm.tiers, qm, now=0.0) is None
+
+    def test_update_fit_recalibrates(self):
+        m = flat_models()
+        qm = make_qm(models=m)
+        adm = AdmissionController(fits=dict(m), slo_s=1.0, reject_cost=0.5)
+        assert adm.decide(Query(qid=0), qm.tiers, qm, now=0.0) == {T0, T1}
+        adm.update_fit(T0, DeviceModel(T0, beta=5.0, b=0.0, a=0.0))
+        adm.update_fit(T1, DeviceModel(T1, beta=5.0, b=0.0, a=0.0))
+        assert adm.decide(Query(qid=1), qm.tiers, qm, now=0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# BrownoutController units
+# ---------------------------------------------------------------------------
+
+class TestBrownoutStages:
+    def test_escalates_through_stages(self):
+        bro = BrownoutController(ewma_alpha=1.0)
+        assert bro.observe(0.5) == NORMAL
+        assert bro.observe(0.75) == DEGRADED
+        assert bro.observe(0.95) == SHEDDING
+        assert bro.transitions == 2
+
+    def test_ewma_smooths_a_single_spike(self):
+        # the first sample seeds the EWMA; later spikes fold in at alpha
+        bro = BrownoutController(ewma_alpha=0.3)
+        bro.observe(0.0)
+        assert bro.observe(1.0) == NORMAL       # 0.3 after one spike
+        assert bro.utilization_ewma == pytest.approx(0.3)
+
+    def test_hysteresis_blocks_flapping_deescalation(self):
+        bro = BrownoutController(degraded_at=0.7, shedding_at=0.9,
+                                 ewma_alpha=1.0, hysteresis=0.1)
+        assert bro.observe(0.75) == DEGRADED
+        # below degraded_at but inside the hysteresis band: stage holds
+        assert bro.observe(0.65) == DEGRADED
+        assert bro.observe(0.55) == NORMAL
+
+    def test_deescalation_is_stepwise_from_shedding(self):
+        bro = BrownoutController(degraded_at=0.7, shedding_at=0.9,
+                                 ewma_alpha=1.0, hysteresis=0.1)
+        assert bro.observe(0.95) == SHEDDING
+        # clears shedding's band (< 0.8) -> lands on degraded
+        assert bro.observe(0.75) == DEGRADED
+        assert bro.observe(0.5) == NORMAL
+        assert bro.transitions == 3
+
+    def test_tighten_scales_remaining_budget(self):
+        bro = BrownoutController(ewma_alpha=1.0, deadline_scale=0.5)
+        bro.observe(0.8)                        # -> degraded
+        assert bro.tighten(10.0, now=2.0) == pytest.approx(6.0)
+        assert bro.tighten(None, now=2.0) is None
+
+    def test_tighten_identity_in_normal(self):
+        bro = BrownoutController()
+        assert bro.tighten(10.0, now=2.0) == 10.0
+
+    def test_reorder_prefers_quantized_at_equal_backlog(self):
+        qm = make_qm()                          # T1 is quantized, both empty
+        bro = BrownoutController(ewma_alpha=1.0)
+        assert list(bro.reorder([T0, T1], qm)) == [T0, T1]  # normal: as-is
+        bro.observe(0.8)
+        assert list(bro.reorder([T0, T1], qm)) == [T1, T0]
+
+    def test_reorder_backlog_dominates_quantization(self):
+        qm = make_qm()
+        for i in range(2):                      # load the quantized tier
+            qm.queues[T1].push(Query(qid=i))
+        bro = BrownoutController(ewma_alpha=1.0)
+        bro.observe(0.8)
+        assert list(bro.reorder([T1, T0], qm)) == [T0, T1]
+
+    def test_reset_and_snapshot(self):
+        bro = BrownoutController(ewma_alpha=1.0)
+        bro.observe(0.95)
+        assert bro.snapshot()["stage"] == SHEDDING
+        bro.reset()
+        assert bro.stage == NORMAL and bro.utilization_ewma is None
+        assert bro.transitions == 0
+
+    @pytest.mark.parametrize("kw", [dict(degraded_at=0.9, shedding_at=0.7),
+                                    dict(degraded_at=0.0),
+                                    dict(ewma_alpha=0.0),
+                                    dict(ewma_alpha=1.5),
+                                    dict(hysteresis=-0.1),
+                                    dict(deadline_scale=0.0)])
+    def test_rejects_bad_config(self, kw):
+        with pytest.raises(ValueError):
+            BrownoutController(**kw)
+
+
+# ---------------------------------------------------------------------------
+# dispatch integration: verdicts, telemetry reasons, cache immunity
+# ---------------------------------------------------------------------------
+
+class TestDispatchIntegration:
+    def test_admission_verdict_and_reason(self):
+        m = flat_models(b0=5.0, b1=5.0)
+        qm = make_qm(models=m, admission=AdmissionController(
+            fits=m, slo_s=1.0, reject_cost=0.5))
+        assert qm.dispatch(Query(qid=0)) == ADMISSION
+        assert qm.stats.rejections == {"admission": 1}
+        assert qm.stats.rejected == 0           # BUSY back-compat untouched
+
+    def test_busy_records_no_capacity_reason(self):
+        qm = make_qm(depths=(1, 1))
+        for i in range(2):
+            qm.dispatch(Query(qid=i))
+        assert qm.dispatch(Query(qid=9)) == BUSY
+        assert qm.stats.rejections.get("no_capacity") == 1
+        assert qm.stats.rejected == 1
+
+    def test_expired_records_reason(self):
+        qm = make_qm()
+        q = Query(qid=0, deadline=1.0, arrival_t=2.0)
+        assert qm.dispatch(q) == "EXPIRED"
+        assert qm.stats.rejections.get("expired") == 1
+
+    def test_utilization_tracks_backlog(self):
+        qm = make_qm(depths=(4, 4))
+        assert qm.utilization() == 0.0
+        for i in range(4):
+            qm.dispatch(Query(qid=i))
+        assert qm.utilization() == pytest.approx(0.5)
+
+    def test_brownout_transitions_counted_once_per_stage_change(self):
+        qm = make_qm(depths=(2, 2), admission=None,
+                     brownout=BrownoutController(degraded_at=0.4,
+                                                 shedding_at=0.9,
+                                                 ewma_alpha=1.0))
+        for i in range(4):
+            qm.dispatch(Query(qid=i))
+        assert qm.stats.brownout_transitions == {DEGRADED: 1}
+
+    def test_cache_hits_served_under_shedding(self):
+        m = flat_models()
+        adm = AdmissionController(fits=m, slo_s=1e-6)  # rejects everything
+        bro = BrownoutController(degraded_at=0.01, shedding_at=0.02,
+                                 ewma_alpha=1.0)
+        ct = cache_tier(8)
+        qm = QueueManager([ct, TierSpec(T0, 2, model=m[T0])],
+                          admission=adm, brownout=bro)
+        import numpy as np
+        hot_p, cold_p = np.array([1, 2], np.int64), np.array([3, 4], np.int64)
+        ct.cache.put(Query(qid=0, payload=hot_p, length=8), [1.0, 2.0])
+        qm.queues[T0].push(Query(qid=50))       # drive utilization over 0.02
+        assert qm.dispatch(Query(qid=2, payload=cold_p, length=8)) \
+            == ADMISSION
+        # the identical-payload repeat is a hit: served at every stage
+        assert qm.dispatch(Query(qid=3, payload=hot_p, length=8)) \
+            == ct.name
+
+    def test_reset_clears_brownout_stage(self):
+        bro = BrownoutController(degraded_at=0.1, shedding_at=0.9,
+                                 ewma_alpha=1.0)
+        qm = make_qm(depths=(2, 2), brownout=bro)
+        for i in range(3):
+            qm.dispatch(Query(qid=i))
+        assert bro.stage == DEGRADED
+        qm.reset()
+        assert bro.stage == NORMAL
+        assert qm.stats.brownout_transitions == {}
+
+    def test_summary_shape_clean_run_has_no_overload_keys(self):
+        qm = make_qm()
+        qm.dispatch(Query(qid=0))
+        s = qm.stats.summary()
+        assert not any(k.startswith(("rejections_", "brownout_to_"))
+                       for k in s)
+
+    def test_summary_reports_nonzero_reasons(self):
+        m = flat_models(b0=5.0, b1=5.0)
+        qm = make_qm(models=m, admission=AdmissionController(
+            fits=m, slo_s=1.0, reject_cost=0.5))
+        qm.dispatch(Query(qid=0))
+        s = qm.stats.summary()
+        assert s["rejections_admission"] == 1
+        assert "rejections_no_capacity" not in s
+
+
+# ---------------------------------------------------------------------------
+# drivers: the client-visible error and cross-driver counter parity
+# ---------------------------------------------------------------------------
+
+class TestDrivers:
+    def test_engine_admission_rejection_is_a_serve_error(self):
+        m = flat_models(b0=5.0, b1=5.0)
+        ve = WindVE(
+            tiers=[TierSpec(T0, 4, backend=ModeledBackend(m[T0],
+                                                          embed_dim=4)),
+                   TierSpec(T1, 4, backend=ModeledBackend(m[T1],
+                                                          embed_dim=4))],
+            admission=AdmissionController(fits=m, slo_s=1.0,
+                                          reject_cost=0.5))
+        try:
+            fut = ve.submit(length=16)
+            with pytest.raises(ServeError) as ei:
+                fut.result(timeout=5)
+            assert ei.value.kind == "admission"
+            assert ve.stats.rejections == {"admission": 1}
+            # a rejection is not a failure: nothing was accepted then lost
+            assert ve.stats.failed == 0
+        finally:
+            ve.shutdown()
+
+    def test_seeded_overload_plan_counters_match_across_drivers(self):
+        N, DEPTH = 12, 6
+
+        def controllers(m):
+            return (AdmissionController(fits=m, slo_s=100.0,
+                                        reject_cost=0.5, watermark=0.5),
+                    BrownoutController(degraded_at=0.3, shedding_at=0.6,
+                                       ewma_alpha=1.0, hysteresis=0.05))
+
+        def counters(t):
+            return {"dispatched": dict(t.dispatched),
+                    "rejections": {k: v for k, v in t.rejections.items()
+                                   if v},
+                    "brownout": dict(t.brownout_transitions),
+                    "completed": t.n_completed, "failed": t.failed}
+
+        m = flat_models()
+        adm, bro = controllers(m)
+        sim = ServingSimulator(
+            tiers=[TierSpec(T0, DEPTH, model=m[T0]),
+                   TierSpec(T1, DEPTH, model=m[T1], quantized=True)],
+            slo_s=100.0, admission=adm, brownout=bro)
+        des = counters(sim.run([(0.0, 16)] * N))
+
+        m2 = flat_models()
+        adm2, bro2 = controllers(m2)
+        ve = WindVE(
+            tiers=[TierSpec(T0, DEPTH,
+                            backend=ModeledBackend(m2[T0], embed_dim=4)),
+                   TierSpec(T1, DEPTH,
+                            backend=ModeledBackend(m2[T1], embed_dim=4),
+                            quantized=True)],
+            admission=adm2, brownout=bro2)
+        old = sys.getswitchinterval()
+        try:
+            sys.setswitchinterval(5.0)   # pinned burst, like the DES's
+            try:                         # same-instant arrivals
+                futs = [ve.submit(length=16) for _ in range(N)]
+            finally:
+                sys.setswitchinterval(old)
+            for f in futs:
+                if f is not None:
+                    try:
+                        f.result(timeout=10)
+                    except ServeError:
+                        pass
+            eng = counters(ve.stats)
+        finally:
+            sys.setswitchinterval(old)
+            ve.shutdown()
+        assert eng == des
+        # the watermark held half of each tier back for retry headroom
+        assert des["rejections"] == {"admission": N - 2 * (DEPTH // 2)}
+
+    def test_des_retry_redispatch_admission_is_terminal(self):
+        # a retried query rejected at re-dispatch must count failed, like
+        # a BUSY re-dispatch (the arrival-time rejection never does)
+        m = flat_models(b0=0.1, b1=0.1)
+        from repro.core.faults import FaultModel, FaultPlan
+        from repro.core.routing import RetryPolicy
+        adm = AdmissionController(fits=m, slo_s=100.0, watermark=0.5)
+        sim = ServingSimulator(
+            tiers=[TierSpec(T0, 4, model=m[T0]),
+                   TierSpec(T1, 4, model=m[T1])],
+            slo_s=100.0, admission=adm,
+            retry=RetryPolicy(max_retries=1, backoff_s=0.0),
+            faults={T0: FaultModel(plan=FaultPlan(fail=(0,)))})
+        res = sim.run([(0.0, 16)] * 4)
+        assert res.n_completed + res.failed == 4 - \
+            res.rejections.get("admission", 0)

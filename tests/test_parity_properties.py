@@ -275,3 +275,110 @@ def test_cache_tier_hit_miss_parity(policy_kind, keys1, keys2):
     assert e.cache_hits.get(CACHE, 0) == expect_hits
     assert e.summary().get("cache_hit_rate") == \
         s.summary().get("cache_hit_rate")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["cascade", "least-loaded", "predictive"]),
+       st.lists(st.integers(min_value=5, max_value=400),
+                min_size=1, max_size=12))
+def test_admission_under_capacity_is_invisible(policy_kind, lengths):
+    """Admission control must be a pure overload mechanism: with depths
+    that cover the whole burst, a full watermark, and an SLO every fit
+    passes, switching the controller ON changes NOTHING — identical
+    dispatch counters, batch multisets, and zero rejections of any reason,
+    in BOTH drivers.  (The capacity-plan bench asserts the opposite regime:
+    under a flash crowd the counters must diverge, and identically so.)"""
+    from repro.core.admission import AdmissionController
+
+    n_tiers = 2
+    depths = [len(lengths), len(lengths)]
+    models = base_models(n_tiers, 1)
+
+    def admission():
+        return AdmissionController(fits=dict(models), slo_s=100.0,
+                                   reject_cost=0.5, watermark=1.0)
+
+    def des(adm):
+        recorders = {n: RecordingModel(m) for n, m in models.items()}
+        tiers = [TierSpec(f"T{i}", depths[i], model=recorders[f"T{i}"])
+                 for i in range(n_tiers)]
+        sim = ServingSimulator(tiers=tiers, slo_s=100.0,
+                               policy=make_policy(policy_kind, models),
+                               admission=adm)
+        res = sim.run([(0.0, ln) for ln in lengths])
+        return (dict(res.dispatched), res.rejected, res.n_completed,
+                {k: v for k, v in res.rejections.items() if v},
+                {n: sorted(r.batches) for n, r in recorders.items()
+                 if r.batches})
+
+    def engine(adm):
+        tiers = [TierSpec(f"T{i}", depths[i],
+                          backend=ModeledBackend(
+                              DeviceModel(f"T{i}", beta=TIER_BETAS[i],
+                                          b=0.0, a=0.0), embed_dim=4))
+                 for i in range(n_tiers)]
+        ve = WindVE(tiers=tiers, policy=make_policy(policy_kind, models),
+                    admission=adm)
+        seen = defaultdict(list)
+        ve.add_batch_hook(lambda t, b, lat: seen[t].append(len(b)))
+        old = sys.getswitchinterval()
+        try:
+            sys.setswitchinterval(5.0)
+            try:
+                futs = [ve.submit(length=ln) for ln in lengths]
+            finally:
+                sys.setswitchinterval(old)
+            done = [f.result(timeout=60) for f in futs if f is not None]
+            out = (dict(ve.stats.dispatched), ve.stats.rejected, len(done),
+                   {k: v for k, v in ve.stats.rejections.items() if v},
+                   {t: sorted(b) for t, b in seen.items() if b})
+        finally:
+            sys.setswitchinterval(old)
+            ve.shutdown()
+        return out
+
+    d_off, d_on = des(None), des(admission())
+    e_off, e_on = engine(None), engine(admission())
+    assert d_on == d_off, (policy_kind, lengths, d_on, d_off)
+    assert e_on == e_off, (policy_kind, lengths, e_on, e_off)
+    assert e_on == d_on, (policy_kind, lengths, e_on, d_on)
+    assert d_on[3] == {}                       # no rejections of any reason
+
+
+def test_admission_preserves_served_embeddings_bitwise():
+    """Real-backend smoke: under capacity, the embeddings a query stream
+    receives are BITWISE identical with the admission controller on vs off
+    — overload control must never perturb what gets computed, only whether
+    a doomed query is accepted."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.admission import AdmissionController
+    from repro.core.windve import JaxEmbedderBackend
+    from repro.data.workload import make_queries
+    from repro.models import embedder
+
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+    payloads = make_queries(4, cfg.vocab_size, length=16, seed=5)
+    fit = DeviceModel("T0", beta=0.01, b=0.001, a=0.0)
+
+    def serve(adm):
+        ve = WindVE(tiers=[TierSpec("T0", 8,
+                                    backend=JaxEmbedderBackend(
+                                        cfg, params, max_tokens=16))],
+                    admission=adm)
+        try:
+            futs = [ve.submit(payload=p, length=16) for p in payloads]
+            assert all(f is not None for f in futs)
+            return [np.asarray(f.result(timeout=60)) for f in futs], \
+                dict(ve.stats.dispatched)
+        finally:
+            ve.shutdown()
+
+    off_emb, off_disp = serve(None)
+    on_emb, on_disp = serve(AdmissionController(fits={"T0": fit},
+                                                slo_s=100.0))
+    assert on_disp == off_disp
+    for a, b in zip(on_emb, off_emb):
+        assert a.dtype == b.dtype and np.array_equal(a, b)

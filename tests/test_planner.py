@@ -1,0 +1,228 @@
+"""Capacity planner + flash-crowd workload + unit-economics cost helpers.
+
+Pins the sizing toolchain under the capacity-plan bench: deterministic
+flash-crowd traces, model-derived latency fits (``fit_from_model``),
+SLO-calibrated topologies (``calibrated_tiers``), the DES-backed
+``evaluate``/``sweep``/``best`` reduction, and the
+``cost_per_million_queries`` / ``overload_shed_fraction`` closed forms —
+including the invariant the bench guards at macro scale: an outage arm
+delivers FEWER accepted queries than its fault-free twin, never more.
+"""
+import math
+
+import pytest
+
+from repro.core.admission import AdmissionController
+from repro.core.cost_model import (cost_per_million_queries,
+                                   overload_shed_fraction)
+from repro.core.estimator import fit_from_model
+from repro.core.faults import FaultModel, FaultSchedule
+from repro.core.health import BrownoutController
+from repro.core.planner import (PlanArm, best, calibrated_tiers, evaluate,
+                                sweep)
+from repro.core.routing import RetryPolicy
+from repro.core.simulator import DeviceModel
+from repro.data.workload import flash_crowd_trace
+
+NPU = lambda: DeviceModel("npu", beta=0.05, b=0.01, a=0.0)
+CPU = lambda: DeviceModel("cpu", beta=0.10, b=0.05, a=0.0)
+
+
+# ---------------------------------------------------------------------------
+# flash-crowd trace
+# ---------------------------------------------------------------------------
+
+class TestFlashCrowdTrace:
+    def test_deterministic_in_seed(self):
+        a = flash_crowd_trace(10, 20.0, 4.0, 3, 4, seed=7)
+        b = flash_crowd_trace(10, 20.0, 4.0, 3, 4, seed=7)
+        assert a == b
+        assert a != flash_crowd_trace(10, 20.0, 4.0, 3, 4, seed=8)
+
+    def test_sorted_and_in_range(self):
+        tr = flash_crowd_trace(10, 20.0, 4.0, 3, 4, seed=1)
+        times = [t for t, _ in tr]
+        assert times == sorted(times)
+        assert all(0.0 <= t < 10.0 for t in times)
+        assert all(ln == 75 for _, ln in tr)
+
+    def test_burst_window_rate_ratio(self):
+        tr = flash_crowd_trace(40, 30.0, 6.0, 10, 10, seed=2)
+        inside = sum(1 for t, _ in tr if 10 <= t < 20) / 10.0
+        outside = sum(1 for t, _ in tr if not 10 <= t < 20) / 30.0
+        # Poisson noise: the realized ratio just needs to be burst-sized
+        assert 4.0 < inside / outside < 8.0
+
+    def test_no_burst_when_mult_is_one(self):
+        tr = flash_crowd_trace(20, 30.0, 1.0, 5, 10, seed=3)
+        inside = sum(1 for t, _ in tr if 5 <= t < 15) / 10.0
+        outside = sum(1 for t, _ in tr if not 5 <= t < 15) / 10.0
+        assert 0.6 < inside / outside < 1.6
+
+    def test_custom_length(self):
+        tr = flash_crowd_trace(5, 10.0, 2.0, 1, 2, length=32, seed=0)
+        assert all(ln == 32 for _, ln in tr)
+
+    @pytest.mark.parametrize("kw", [dict(n_seconds=-1), dict(base_rate=-1.0),
+                                    dict(burst_mult=0.5),
+                                    dict(burst_len=-1.0)])
+    def test_rejects_bad_config(self, kw):
+        base = dict(n_seconds=5, base_rate=10.0, burst_mult=2.0,
+                    burst_start=1, burst_len=2)
+        base.update(kw)
+        with pytest.raises(ValueError):
+            flash_crowd_trace(**base)
+
+
+# ---------------------------------------------------------------------------
+# fit_from_model / calibrated_tiers
+# ---------------------------------------------------------------------------
+
+class TestCalibration:
+    def test_fit_recovers_linear_model(self):
+        m = NPU()                       # t(C) = 0.05 + 0.01 C, noise-free
+        fit = fit_from_model(m)
+        for c in (1, 10, 50):
+            assert fit.latency(c) == pytest.approx(m.latency(c, 75),
+                                                   rel=1e-6)
+        assert fit.max_concurrency(1.0) == 95
+
+    def test_calibrated_depths_are_eq12_max_concurrency(self):
+        tiers, fits = calibrated_tiers({"NPU": NPU(), "CPU": CPU()}, 1.0,
+                                       quantized={"CPU"})
+        by = {t.name: t for t in tiers}
+        assert by["NPU"].depth == fits["NPU"].max_concurrency(1.0) == 95
+        assert by["CPU"].depth == fits["CPU"].max_concurrency(1.0) == 18
+        assert by["CPU"].quantized and not by["NPU"].quantized
+
+    def test_raises_when_no_tier_meets_slo(self):
+        slow = DeviceModel("s", beta=5.0, b=1.0, a=0.0)
+        with pytest.raises(ValueError, match="SLO"):
+            calibrated_tiers({"S": slow}, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# unit-economics closed forms
+# ---------------------------------------------------------------------------
+
+class TestCostHelpers:
+    def test_cost_per_million_math(self):
+        # 10/s for 100s serving 1e6 queries: 1000 per million
+        assert cost_per_million_queries(10.0, 100.0, 10 ** 6) == \
+            pytest.approx(1000.0)
+        assert cost_per_million_queries(10.0, 100.0, 500) == \
+            pytest.approx(10.0 * 100.0 / 500 * 1e6)
+
+    def test_zero_accepted_is_infinite(self):
+        assert cost_per_million_queries(10.0, 100.0, 0) == math.inf
+
+    @pytest.mark.parametrize("kw", [dict(price_per_s=-1),
+                                    dict(horizon_s=0),
+                                    dict(accepted=-1)])
+    def test_rejects_bad_inputs(self, kw):
+        base = dict(price_per_s=1.0, horizon_s=1.0, accepted=1)
+        base.update(kw)
+        with pytest.raises(ValueError):
+            cost_per_million_queries(**base)
+
+    def test_shed_fraction_bound(self):
+        assert overload_shed_fraction(100.0, 40.0) == pytest.approx(0.6)
+        assert overload_shed_fraction(100.0, 100.0) == 0.0
+        assert overload_shed_fraction(50.0, 100.0) == 0.0
+        with pytest.raises(ValueError):
+            overload_shed_fraction(0.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# evaluate / sweep / best
+# ---------------------------------------------------------------------------
+
+def controlled_arm(name, price, faults=None, retry=None):
+    tiers, fits = calibrated_tiers({"NPU": NPU(), "CPU": CPU()}, 1.0,
+                                   quantized={"CPU"})
+    return PlanArm(name, tiers=tiers, price_per_s=price,
+                   admission=AdmissionController(fits=fits, slo_s=1.0,
+                                                 reject_cost=0.5),
+                   brownout=BrownoutController(), deadline_s=2.0,
+                   faults=faults or {}, retry=retry)
+
+
+class TestEvaluate:
+    def test_under_capacity_accepts_everything(self):
+        trace = flash_crowd_trace(10, 10.0, 1.0, 0, 0, seed=4)
+        p = evaluate(controlled_arm("calm", 10.0), trace, slo_s=1.0,
+                     trace_name="calm")
+        assert p.arrivals == len(trace)
+        assert p.accepted == p.arrivals == p.completed
+        assert p.slo_attainment == 1.0
+        assert p.deadline_misses == 0 and p.failed == 0
+        assert p.cost == pytest.approx(10.0 * p.horizon_s)
+        assert p.cost_per_m_accepted == pytest.approx(
+            cost_per_million_queries(10.0, p.horizon_s, p.accepted))
+
+    def test_row_is_flat_and_json_ready(self):
+        trace = flash_crowd_trace(5, 10.0, 1.0, 0, 0, seed=4)
+        row = evaluate(controlled_arm("calm", 10.0), trace).row()
+        assert row["arm"] == "calm"
+        assert all(isinstance(v, (str, int, float)) for v in row.values())
+
+    def test_overload_sheds_and_reduces_accepted(self):
+        trace = flash_crowd_trace(10, 200.0, 1.0, 0, 0, seed=4)
+        p = evaluate(controlled_arm("storm", 10.0), trace)
+        assert p.rejections.get("admission", 0) > 0
+        assert p.accepted < p.arrivals
+        assert p.accepted + sum(p.rejections.values()) + p.failed \
+            >= p.arrivals
+
+    def test_outage_arm_delivers_less_than_fault_free_twin(self):
+        trace = flash_crowd_trace(20, 60.0, 4.0, 5, 10, seed=5)
+        clean = evaluate(controlled_arm("clean", 10.0), trace)
+        sched = FaultSchedule.from_mttf(mttf_s=6.0, mttr_s=2.0,
+                                        horizon_s=20.0, seed=7)
+        faulty = evaluate(controlled_arm(
+            "outage", 10.0,
+            faults={"NPU": FaultModel(schedule=sched, fail_latency_s=0.05)},
+            retry=RetryPolicy(max_retries=1, backoff_s=0.0)), trace)
+        assert faulty.accepted < clean.accepted
+        assert faulty.cost_per_m_accepted > clean.cost_per_m_accepted
+
+    def test_empty_trace_rejected(self):
+        with pytest.raises(ValueError):
+            evaluate(controlled_arm("x", 10.0), [])
+
+    def test_arm_validation(self):
+        tiers, _ = calibrated_tiers({"NPU": NPU()}, 1.0)
+        with pytest.raises(ValueError):
+            PlanArm("x", tiers=tiers, price_per_s=-1.0)
+        with pytest.raises(ValueError):
+            PlanArm("x", tiers=[], price_per_s=1.0)
+
+
+class TestSweepAndBest:
+    def test_sweep_grid_and_best_pick(self):
+        traces = {"calm": flash_crowd_trace(8, 10.0, 1.0, 0, 0, seed=4),
+                  "storm": flash_crowd_trace(8, 150.0, 1.0, 0, 0, seed=4)}
+        arms = [controlled_arm("one-npu", 10.0),
+                controlled_arm("pricey", 20.0)]
+        pts = sweep(arms, traces, slo_s=1.0)
+        assert len(pts) == 4
+        assert {(p.arm, p.trace) for p in pts} == \
+            {(a, t) for a in ("one-npu", "pricey")
+             for t in ("calm", "storm")}
+        calm = [p for p in pts if p.trace == "calm"]
+        assert best(calm).arm == "one-npu"   # same served load, half price
+
+    def test_best_enforces_attainment_bar(self):
+        trace = flash_crowd_trace(8, 10.0, 1.0, 0, 0, seed=4)
+        pts = [evaluate(controlled_arm("a", 10.0), trace)]
+        assert best(pts, min_attainment=0.99).arm == "a"
+        with pytest.raises(ValueError, match="attainment"):
+            best(pts, min_attainment=1.1)
+
+    def test_one_arm_many_traces_resets_between_runs(self):
+        # the same live arm object must give identical results on repeat
+        arm = controlled_arm("reused", 10.0)
+        trace = flash_crowd_trace(8, 50.0, 2.0, 2, 3, seed=6)
+        p1 = evaluate(arm, trace)
+        p2 = evaluate(arm, trace)
+        assert p1 == p2
