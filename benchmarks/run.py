@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.cache_microbench",  # zero-cost exact-match cache tier
     "benchmarks.chaos_microbench",  # fault tolerance: serve through outage
     "benchmarks.capacity_plan_microbench",  # overload control + planner
+    "benchmarks.multihost_microbench",  # replica-aware routing A/B
     "benchmarks.roofline_table",    # §Roofline from the dry-run artifacts
 ]
 
@@ -33,6 +34,10 @@ SMOKE_MODULES = [
     "benchmarks.table3_queue_depth",
     "benchmarks.bucketing_microbench",
 ]
+
+# NOTE: multihost_microbench runs in CI as a dedicated step under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (like the sharded
+# bench) so the replica-mesh carving leg sees a real multi-device pool
 
 
 def main() -> None:

@@ -84,6 +84,49 @@ def fanout_depth(alpha: float, beta: float, devices: int, slo_s: float,
     return devices * math.floor(budget / alpha + 1e-9)
 
 
+def mesh_overhead(fanout_beta_s: float, devices: int,
+                  interhost_beta_s: float = 0.0, hosts: int = 1) -> float:
+    """Per-execution scatter/gather overhead of a (possibly multi-host)
+    replica mesh — the ``overhead_s`` term :func:`fanout_depth` subtracts
+    from the SLO budget, and the closed form of
+    ``simulator.FanOutModel.overhead_s``:
+
+        fanout_beta * log2(devices) + interhost_beta * log2(hosts).
+
+    The intra-host tree rides the device interconnect; when the replica's
+    device group is carved across ``hosts`` machines the gather's top
+    ``log2(hosts)`` levels ride the network fabric instead, which is why
+    depth calibration at cluster scale must price the two terms separately
+    (``interhost_beta_s`` is typically orders of magnitude above
+    ``fanout_beta_s``)."""
+    if devices < 1 or hosts < 1:
+        raise ValueError("devices and hosts must be >= 1")
+    if devices % hosts:
+        raise ValueError(f"devices ({devices}) must split evenly over "
+                         f"hosts ({hosts})")
+    over = fanout_beta_s * math.log2(devices) if devices > 1 else 0.0
+    if hosts > 1:
+        over += interhost_beta_s * math.log2(hosts)
+    return over
+
+
+def replica_capacity(depth: int, replicas: int, down: int = 0) -> int:
+    """System max concurrency of R identical replicas with k quarantined:
+    ``(R - k) * depth`` — the replica-topology instance of
+    :func:`degraded_capacity`, and what the Eq. 6 peak-provisioned cost
+    divides by while k hosts are down.  A replica is a whole capacity unit:
+    its breaker trips it entirely, so partial-replica capacity shows up as
+    a *changed per-replica depth* (recalibrate on the degraded device
+    count via :func:`fanout_depth`), never as a fractional replica."""
+    if depth < 0:
+        raise ValueError("depth must be >= 0")
+    if replicas < 1:
+        raise ValueError("replicas must be >= 1")
+    if not 0 <= down <= replicas:
+        raise ValueError(f"down must be in [0, {replicas}], got {down}")
+    return (replicas - down) * depth
+
+
 def fanout_efficiency(depth_n: int, depth_1: int, devices: int) -> float:
     """Fraction of the ideal N-fold depth scaling a fan-out tier realises:
     depth_N / (N * depth_1).  1.0 == perfect linear scaling; the

@@ -16,7 +16,7 @@ against, so Table 3 can be reproduced with both methods.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
@@ -134,6 +134,26 @@ def fit_from_model(model, probe_points: Sequence[int] = (1, 4, 16, 64),
     pts = [(int(c), float(model.latency(int(c), length)))
            for c in probe_points]
     return fit_latency([p[0] for p in pts], [p[1] for p in pts])
+
+
+def replica_fits(models: Mapping[str, object],
+                 probe_points: Sequence[int] = (1, 4, 16, 64),
+                 length: int = 75) -> Dict[str, "LatencyFit"]:
+    """One Eq. 12 fit PER replica tier, keyed by the replica's tier name.
+
+    Cross-replica predictive routing prices each replica's backlog against
+    its OWN service curve — replicas are independently-failing (and, after
+    a partial outage, independently-*degraded*) capacity units, so a
+    single shared fit would misprice a replica running on fewer devices or
+    across more hosts.  ``models`` maps replica tier name (e.g.
+    ``NPU@h0r1``, see ``routing.replica_name``) to its ``DeviceModel`` /
+    ``FanOutModel``; the returned dict plugs directly into
+    ``PredictivePolicy(fits=...)`` and ``AdmissionController(fits=...)``.
+    Probe points should come from ``fanout_probe_points`` at each
+    replica's own device count when the replicas are meshes.
+    """
+    return {name: fit_from_model(model, probe_points, length)
+            for name, model in models.items()}
 
 
 def estimate_depth(profile_fn: Callable[[int], float], slo_s: float,

@@ -30,9 +30,9 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import (Any, Callable, Deque, Dict, Iterable, List, Optional,
-                    Sequence, Union)
+                    Sequence, Tuple, Union)
 
 from repro.core.health import CLOSED as BREAKER_CLOSED
 from repro.core.health import NORMAL as BROWNOUT_NORMAL
@@ -263,6 +263,16 @@ class TierSpec:
     brownout degradation the candidate re-rank prefers quantized tiers at
     equal backlog — quality is shed before queries are (see
     ``repro.core.health.BrownoutController.reorder``).  Inert otherwise.
+
+    ``replica_of`` / ``host`` are replica identity, set by
+    :func:`replicate` when this spec is one replica of a logical tier:
+    ``replica_of`` names the logical tier and ``host`` the host index the
+    replica's device group lives on.  The scheduler itself treats replicas
+    as ordinary tiers (that is the point — each replica is an
+    independently-failing capacity unit with its own queue, breaker,
+    admission watermark, and service-curve fit); the identity fields exist
+    so summaries and telemetry can roll per-replica counters back up to
+    the logical tier (``replica_base``).
     """
 
     name: str
@@ -275,6 +285,8 @@ class TierSpec:
     cache: Any = None
     breaker: Any = None
     quantized: bool = False
+    replica_of: Optional[str] = None
+    host: int = 0
 
 
 def device_tiers(tiers: Sequence[TierSpec]) -> List[TierSpec]:
@@ -296,6 +308,98 @@ def dispatchable(tiers: Sequence[TierSpec]) -> List[TierSpec]:
     """
     return [t for t in tiers if t.cache is None and
             (t.breaker is None or t.breaker.dispatchable)]
+
+
+# ---------------------------------------------------------------------------
+# replicas: one logical tier expanded into hosts x replicas capacity units
+# ---------------------------------------------------------------------------
+
+def replica_name(base: str, host: int, replica: int) -> str:
+    """Canonical replica tier name: ``NPU`` on host 1, replica 0 ->
+    ``NPU@h1r0``.  Telemetry, fits, breakers, and watermarks all key by
+    this name, so every per-tier mechanism is per-replica automatically."""
+    return f"{base}@h{host}r{replica}"
+
+
+def replica_base(name: str) -> str:
+    """Logical tier a replica name belongs to (``NPU@h1r0`` -> ``NPU``);
+    identity for non-replica names, so roll-ups are safe on any tier."""
+    i = name.rfind("@h")
+    return name[:i] if i > 0 else name
+
+
+def replicate(spec: TierSpec, hosts: int = 1, replicas: int = 1, *,
+              backend: Optional[Callable[[int, int], Any]] = None,
+              model: Optional[Callable[[int, int], Any]] = None,
+              breaker: Optional[Callable[[int, int], Any]] = None,
+              ) -> List[TierSpec]:
+    """Expand one logical tier into ``hosts * replicas`` first-class
+    ``TierSpec``s (cascade order: host-major, replica-minor).
+
+    Each replica must be an *independently-failing* capacity unit, so the
+    stateful parts are built per replica through the optional factories
+    (``(host, replica) -> instance``): a shared backend would serialize
+    replicas on one device group, a shared breaker would quarantine all
+    replicas when one host dies.  Fields with no factory are copied from
+    ``spec`` (depth, max_batch, bucket_fn, quantized — per-replica policy
+    knobs are a ``dataclasses.replace`` away).
+
+    The degrade rule mirrors ``sharded_model``: ``replicate(spec, 1, 1)``
+    returns ``[spec]`` UNCHANGED — same object, same name — so a 1x1
+    topology is bitwise today's single-replica path (the factories are not
+    consulted; the spec's own backend/model ARE the single replica).
+    """
+    if hosts < 1 or replicas < 1:
+        raise ValueError(f"hosts and replicas must be >= 1, "
+                         f"got {hosts}x{replicas}")
+    if spec.cache is not None:
+        raise ValueError("cache tiers hold no device group to replicate")
+    if hosts == 1 and replicas == 1:
+        return [spec]
+    out: List[TierSpec] = []
+    for h in range(hosts):
+        for r in range(replicas):
+            out.append(_dc_replace(
+                spec,
+                name=replica_name(spec.name, h, r),
+                backend=backend(h, r) if backend is not None else spec.backend,
+                model=model(h, r) if model is not None else spec.model,
+                breaker=breaker(h, r) if breaker is not None else spec.breaker,
+                replica_of=spec.name,
+                host=h))
+    return out
+
+
+@dataclass(frozen=True)
+class ReplicaSet:
+    """The replica view of one logical tier: the expanded specs plus the
+    grouping lens (per-host, per-name) that serve summaries and telemetry
+    roll-ups look through.  ``build`` is :func:`replicate` + bookkeeping;
+    at 1x1 the set holds the original spec under its original name."""
+
+    base: str
+    hosts: int
+    replicas: int
+    specs: Tuple[TierSpec, ...]
+
+    @classmethod
+    def build(cls, spec: TierSpec, hosts: int = 1, replicas: int = 1,
+              **factories: Any) -> "ReplicaSet":
+        return cls(spec.name, hosts, replicas,
+                   tuple(replicate(spec, hosts, replicas, **factories)))
+
+    @property
+    def names(self) -> List[str]:
+        return [t.name for t in self.specs]
+
+    def on_host(self, host: int) -> List[TierSpec]:
+        return [t for t in self.specs if t.host == host]
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def __len__(self) -> int:
+        return len(self.specs)
 
 
 class DispatchPolicy:
@@ -476,6 +580,31 @@ class PredictivePolicy(DispatchPolicy):
         return [real[i].name for i in sorted(range(len(real)), key=key)]
 
 
+class RoundRobinPolicy(DispatchPolicy):
+    """Replica-oblivious baseline: rotate the dispatchable tier list one
+    position per dispatch, blind to backlog, service curves, or replica
+    identity.  This is the strawman front-end router the multi-replica A/B
+    (``benchmarks/multihost_microbench.py``) measures ``PredictivePolicy``
+    against — same hardware, no per-replica pricing.  Deterministic: the
+    rotation counter advances exactly once per ``candidates`` call, so
+    both drivers see the same sequence for the same arrival order."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._n = 0
+        self._rr_lock = threading.Lock()
+
+    def candidates(self, query, tiers, qm):
+        real = dispatchable(tiers)
+        if not real:
+            return []
+        with self._rr_lock:
+            k = self._n % len(real)
+            self._n += 1
+        return [t.name for t in real[k:] + real[:k]]
+
+
 class QueueManager:
     """Policy dispatch over N bounded tier queues (Algorithm 1 core).
 
@@ -614,14 +743,20 @@ class QueueManager:
 
     def utilization(self) -> float:
         """Live load fraction: queued + in-flight over the dispatchable
-        capacity (the paper's C summed over reachable tiers).  1.0 when no
-        capacity is reachable — a fully-tripped topology IS overloaded."""
+        capacity (the paper's C summed over reachable tiers), clamped to
+        [0, 1].  1.0 when no capacity is reachable — a fully-tripped
+        topology IS overloaded.  The clamp matters: retry/failover
+        re-dispatch onto a shrunken dispatchable set (a tripped tier keeps
+        its in-flight work while leaving the denominator), or an online
+        ``set_depth`` below the live backlog, can push the raw ratio past
+        1.0 — a *fraction* above 1 would over-drive the brownout EWMA
+        through its shedding threshold in a single sample."""
         cap = self.degraded_max_concurrency
         if cap <= 0:
             return 1.0
         load = sum(len(self.queues[t.name]) for t in dispatchable(self.tiers)
                    if t.name in self.queues)
-        return load / cap
+        return max(0.0, min(1.0, load / cap))
 
     # -- fault-tolerance bridges (drivers -> breaker + telemetry) ----------
     def tier_success(self, device: str, service_s: float, now: float) -> None:

@@ -134,12 +134,18 @@ class FanOutModel:
     it matches the depth calibrated on the real sharded backend:
 
     * ``chunk_plan`` mirrors the bucketed backend's binary batch
-      decomposition with the floor raised to the device count;
+      decomposition with the floor raised to the largest power of two that
+      fits the device count — a *degraded* mesh (one host quarantined by
+      its breaker leaves e.g. 6 of 8 devices) stays plannable: chunks stay
+      pow2 (compile-cache bucketing preserved) and the straggler device
+      takes ``ceil(chunk / devices)`` rows;
     * per-device service time comes from the wrapped single-device
       ``DeviceModel`` at the per-device row count (the existing
       length/batch cost model, unchanged);
     * each chunk adds a fan-out/gather overhead term
-      (``fanout_beta_s * log2(devices)`` — a tree scatter+gather), and a
+      (``fanout_beta_s * log2(devices)`` — a tree scatter+gather, plus
+      ``interhost_beta_s * log2(hosts)`` when the mesh spans hosts: the
+      cross-host all-gather rides the slower network fabric), and a
       noisy base model samples each device independently, so the chunk
       latency is the straggler's (max over devices);
     * chunks of one batch serialize (the real backend enqueues them on the
@@ -153,19 +159,24 @@ class FanOutModel:
     base: DeviceModel
     devices: int
     fanout_beta_s: float = 0.0
+    hosts: int = 1
+    interhost_beta_s: float = 0.0
 
     def __post_init__(self):
         if self.devices < 2:
             raise ValueError("FanOutModel needs >= 2 devices; use the base "
                              "DeviceModel for a single device")
-        if self.devices & (self.devices - 1):
-            raise ValueError(f"devices must be a power of two (mesh "
-                             f"constraint), got {self.devices}")
+        if self.hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {self.hosts}")
+        if self.devices % self.hosts:
+            raise ValueError(f"devices ({self.devices}) must split evenly "
+                             f"over hosts ({self.hosts})")
 
     # profile_fn_for / telemetry duck-type these off DeviceModel
     @property
     def name(self) -> str:
-        return f"{self.base.name}x{self.devices}dev"
+        tag = f"{self.base.name}x{self.devices}dev"
+        return tag if self.hosts <= 1 else f"{tag}x{self.hosts}h"
 
     @property
     def noise_std(self) -> float:
@@ -177,19 +188,35 @@ class FanOutModel:
 
     @property
     def overhead_s(self) -> float:
-        """Per-execution scatter+gather cost of the mesh (tree depth)."""
-        return self.fanout_beta_s * math.log2(self.devices)
+        """Per-execution scatter+gather cost of the mesh: the intra-host
+        tree (depth log2(devices)) plus, when the mesh spans hosts, a
+        cross-host gather tree on the network fabric (depth log2(hosts))."""
+        over = self.fanout_beta_s * math.log2(self.devices)
+        if self.hosts > 1:
+            over += self.interhost_beta_s * math.log2(self.hosts)
+        return over
+
+    @property
+    def chunk_floor(self) -> int:
+        """Largest power of two <= ``devices``: chunks stay pow2 (the
+        compile-cache bucket grid) even when the device count is degraded
+        mid-outage to a non-pow2 value."""
+        return 1 << (self.devices.bit_length() - 1)
 
     def chunk_plan(self, batch: int) -> List[int]:
-        """Pow2 execution chunks for a batch (floored at the mesh size)."""
-        return _pow2_chunks(batch, self.devices)
+        """Pow2 execution chunks for a batch (floored at the largest pow2
+        that fits the — possibly degraded — mesh size)."""
+        return _pow2_chunks(batch, self.chunk_floor)
 
     def latency(self, concurrency: float, length: int = 75,
                 rng: Optional[random.Random] = None) -> float:
         batch = max(1, int(math.ceil(concurrency)))
         total = 0.0
         for chunk in self.chunk_plan(batch):
-            rows = chunk // self.devices
+            # ceil: on a non-pow2 (degraded) mesh the rows split unevenly
+            # and the chunk completes with the fullest device; exact
+            # division — bitwise the old path — when devices is pow2
+            rows = -(-chunk // self.devices)
             if self.base.noise_std and rng is not None:
                 # independent per-device noise: the chunk finishes with the
                 # straggler (the Atlas/Kunpeng outliers of §5.3, fanned out)
@@ -202,13 +229,15 @@ class FanOutModel:
 
 
 def sharded_model(base: DeviceModel, devices: int = 1,
-                  fanout_beta_s: float = 0.0):
+                  fanout_beta_s: float = 0.0, hosts: int = 1,
+                  interhost_beta_s: float = 0.0):
     """The DES-side mirror of ``ShardedEmbedderBackend``'s mesh degrade
     rule: 1 device IS the base model (bitwise the single-device path),
-    2+ devices wrap it in the fan-out service-curve model."""
+    2+ devices wrap it in the fan-out service-curve model — spanning
+    ``hosts`` machines when a replica group is carved across the pool."""
     if devices <= 1:
         return base
-    return FanOutModel(base, devices, fanout_beta_s)
+    return FanOutModel(base, devices, fanout_beta_s, hosts, interhost_beta_s)
 
 
 def cpu_core_scaled(dev: DeviceModel, cores: int, full_cores: int = 44

@@ -259,6 +259,41 @@ class Telemetry:
     def throughput(self, window_s: float) -> float:
         return self.accepted / window_s if window_s > 0 else 0.0
 
+    def replica_rollup(self) -> Dict[str, Dict[str, object]]:
+        """Per-tier counters regrouped by LOGICAL tier — the replica lens.
+
+        Every counter here is already per-replica (replicas are ordinary
+        tiers keyed by their ``NPU@h0r1``-style names); this rolls them
+        back up by ``routing.replica_base`` so a serve summary can show
+        both the logical total and the per-replica split:
+        ``{"NPU": {"replicas": ["NPU@h0r0", ...], "dispatched": 120,
+        "dispatched_by_replica": {"NPU@h0r0": 61, ...}, ...}}``.  Tiers
+        that were never replicated group under their own name with a
+        single-entry replica list, so the rollup is safe on any topology.
+        """
+        from repro.core.routing import replica_base
+        per_tier = {
+            "dispatched": self.dispatched,
+            "completed": self.per_device,
+            "deadline_misses": self.deadline_misses,
+            "retries": self.retries,
+            "backend_errors": self.backend_errors,
+            "breaker_trips": self.breaker_trips,
+            "breaker_recoveries": self.breaker_recoveries,
+        }
+        groups: Dict[str, Dict[str, object]] = {}
+        names: Dict[str, set] = {}
+        for metric, counts in per_tier.items():
+            for name, v in counts.items():
+                base = replica_base(name)
+                g = groups.setdefault(base, {})
+                names.setdefault(base, set()).add(name)
+                g[metric] = g.get(metric, 0) + v
+                g.setdefault(f"{metric}_by_replica", {})[name] = v
+        for base, g in groups.items():
+            g["replicas"] = sorted(names[base])
+        return groups
+
     def summary(self) -> Dict[str, float]:
         """One flat record of the run: dispatch verdicts, completions, SLO
         compliance and payload-truncation count (quality loss is surfaced

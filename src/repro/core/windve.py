@@ -79,12 +79,21 @@ class ModeledBackend(Backend):
     ``fanout_beta_s * log2(N)`` scatter/gather term per execution).
     ``devices=1`` keeps the wrapped model untouched, exactly like a
     1-device mesh degrading to the single-device path.
+
+    ``hosts=H`` (with ``interhost_beta_s``) marks the device group as
+    spanning H machines: the fan-out curve gains the cross-host gather
+    term (``interhost_beta_s * log2(H)``), so an engine replica carved
+    across hosts prices its network fabric exactly like the DES does —
+    depth calibration against this backend stays honest at cluster scale.
     """
 
     def __init__(self, model: DeviceModel, embed_dim: int = 1024, *,
-                 devices: int = 1, fanout_beta_s: float = 0.0):
-        self.model = sharded_model(model, devices, fanout_beta_s)
+                 devices: int = 1, fanout_beta_s: float = 0.0,
+                 hosts: int = 1, interhost_beta_s: float = 0.0):
+        self.model = sharded_model(model, devices, fanout_beta_s,
+                                   hosts, interhost_beta_s)
         self.devices = max(1, devices)
+        self.hosts = max(1, hosts)
         self.embed_dim = embed_dim
         self.name = self.model.name
 

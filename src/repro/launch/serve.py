@@ -40,11 +40,12 @@ from repro.core.bucketing import length_bucket_fn
 from repro.core.cache import cache_tier
 from repro.core.device_detector import DeviceInventory, detect
 from repro.core.estimator import (estimate_depth, estimate_depth_per_bucket,
-                                  fanout_probe_points)
+                                  fanout_probe_points, replica_fits)
 from repro.core.health import BrownoutController, CircuitBreaker
 from repro.core.routing import (CPU, NPU, CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, PredictivePolicy, Query,
-                                RetryPolicy, TierSpec)
+                                RetryPolicy, RoundRobinPolicy, TierSpec,
+                                replicate)
 from repro.core.sharded_backend import ShardedEmbedderBackend
 from repro.core.simulator import PAPER_DEVICES, profile_fn_for
 from repro.core.windve import ModeledBackend, WindVE
@@ -56,6 +57,7 @@ POLICIES = {
     "length-aware": LengthAwarePolicy,
     "least-loaded": LeastLoadedPolicy,
     "predictive": PredictivePolicy,
+    "round-robin": RoundRobinPolicy,
 }
 
 MAX_TOKENS = 96
@@ -66,7 +68,8 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
                  smoke: bool = True, heter: bool = True,
                  npu_model: str = "tesla-v100/bge", seed: int = 0,
                  policy: str = "cascade", devices: int = 0,
-                 npu_devices: int = 1, prewarm: bool = False):
+                 npu_devices: int = 1, prewarm: bool = False,
+                 hosts: int = 1, replicas: int = 1):
     cfg = get_config(model)
     if smoke:
         cfg = cfg.smoke()
@@ -78,10 +81,17 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
 
     # the modeled accelerator pool: --npu-devices N fans the tier out over
     # an N-device mesh model (per-device pow2 chunks + gather overhead), so
-    # the depth calibrated below fits the curve a sharded deployment shows
+    # the depth calibrated below fits the curve a sharded deployment shows.
+    # --hosts H --replicas R expands this tier into H*R replica tiers, each
+    # with its OWN backend instance (independently-failing capacity units);
+    # 1x1 stays bitwise the single-replica path.
     npu_dev = PAPER_DEVICES[npu_model]
-    npu_be = ModeledBackend(npu_dev, embed_dim=cfg.d_model,
-                            devices=npu_devices)
+
+    def npu_backend(h: int, r: int) -> ModeledBackend:
+        return ModeledBackend(npu_dev, embed_dim=cfg.d_model,
+                              devices=npu_devices)
+
+    npu_be = npu_backend(0, 0)
     # the real pool: one tier fans out over the local device mesh; dtype /
     # donation / async dispatch follow the embed_* §Perf flags
     local = jax.local_devices()
@@ -123,13 +133,32 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
           f"C_CPU={d_cpu}" + (f" (a={fit_c.alpha:.4f} b={fit_c.beta:.3f})"
                               if fit_c else ""))
 
+    # the accelerator tier, expanded to hosts x replicas first-class tiers
+    # (replicate(spec, 1, 1) returns the original spec untouched): each
+    # replica gets its own ModeledBackend — and below its own breaker, its
+    # own Eq. 12 fit, and its own admission watermark, because a replica is
+    # an independently-failing capacity unit
+    npu_tiers = replicate(TierSpec(NPU, d_npu, backend=npu_be),
+                          hosts, replicas, backend=npu_backend)
+    if len(npu_tiers) > 1:
+        print(f"[serve] replicas: {hosts} host(s) x {replicas} = "
+              f"{len(npu_tiers)} {NPU} replica tier(s), "
+              f"C_total={d_npu * len(npu_tiers)}: "
+              + " ".join(t.name for t in npu_tiers))
+    # per-replica Eq. 12 fits, keyed by replica tier name — what makes the
+    # predictive policy and the admission controller price each replica's
+    # backlog against its own service curve
+    npu_fits = replica_fits(
+        {t.name: t.backend.model for t in npu_tiers},
+        probe_points=fanout_probe_points(npu_devices))
+
     policy_obj = POLICIES[policy]()
     if policy == "predictive":
         # seed the latency-predictive dispatch with the offline Eq. 12 fits
         # (per-tier service curves); the online calibrator attached below
         # refreshes them from live traffic through the batch hook
         policy_obj = PredictivePolicy(
-            fits={NPU: fit_n, **({CPU: fit_c} if fit_c else {})},
+            fits={**npu_fits, **({CPU: fit_c} if fit_c else {})},
             bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET, MAX_TOKENS))
     if policy == "length-aware" and det.heter_enable and d_cpu > 0:
         # one Eq. 12 fit PER seq-length bucket: the long-query threshold is
@@ -162,7 +191,7 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
 
     # the topology is a TierSpec list: N tiers are a config change, not a
     # rewrite (e.g. append a little-core CPU pool here)
-    tiers = [TierSpec(NPU, d_npu, backend=npu_be)]
+    tiers = list(npu_tiers)
     if det.heter_enable and d_cpu > 0:
         tiers.append(TierSpec(CPU, d_cpu, backend=cpu_be,
                               bucket_fn=length_bucket_fn(MIN_SEQ_BUCKET,
@@ -206,7 +235,7 @@ def build_engine(model: str = "bge-large-zh-v1.5", slo: float = 1.0,
     admission = None
     if flags.admission:
         admission = AdmissionController(
-            fits={NPU: fit_n, **({CPU: fit_c} if fit_c else {})},
+            fits={**npu_fits, **({CPU: fit_c} if fit_c else {})},
             slo_s=slo, reject_cost=flags.reject_cost,
             watermark=flags.watermark)
         print(f"[serve] admission control: reject_cost={flags.reject_cost} "
@@ -256,6 +285,14 @@ def main() -> None:
     ap.add_argument("--npu-devices", type=int, default=1,
                     help="devices the MODELED accelerator tier fans out "
                          "over (DES-calibrated Eq. 12 fan-out curve)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="hosts the accelerator tier replicates across; "
+                         "each host carries --replicas replica tiers "
+                         "(1x1 = today's single-replica path)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="accelerator replicas per host — each an "
+                         "independently-failing tier with its own queue, "
+                         "breaker, and Eq. 12 fit")
     ap.add_argument("--prewarm", action="store_true",
                     help="compile the (B, S) bucket grid before serving")
     args = ap.parse_args()
@@ -265,7 +302,8 @@ def main() -> None:
     engine, cfg = build_engine(args.model, args.slo, heter=not args.no_heter,
                                policy=args.policy, devices=args.devices,
                                npu_devices=args.npu_devices,
-                               prewarm=args.prewarm)
+                               prewarm=args.prewarm,
+                               hosts=args.hosts, replicas=args.replicas)
     queries = make_queries(args.queries, cfg.vocab_size, args.length)
     t0 = time.monotonic()
     futs = [engine.submit(payload=q, length=args.length) for q in queries]
@@ -300,6 +338,20 @@ def main() -> None:
           f"p50={s.p(50):.3f}s p99={s.p(99):.3f}s  "
           f"SLO({args.slo}s) violations="
           f"{sum(1 for l in s.latencies if l > args.slo)}")
+    if args.hosts * args.replicas > 1:
+        # replica-aware summary: per-replica counters rolled up by logical
+        # tier, so imbalance (and a quarantined replica) is visible at a
+        # glance instead of buried in @hXrY-keyed raw counters
+        for base, g in sorted(s.replica_rollup().items()):
+            if len(g["replicas"]) < 2:
+                continue
+            split = g.get("dispatched_by_replica", {})
+            print(f"[serve] replicas[{base}]: dispatched="
+                  f"{g.get('dispatched', 0)} completed="
+                  f"{g.get('completed', 0)} over {len(g['replicas'])} "
+                  f"replicas  ["
+                  + " ".join(f"{n}={split.get(n, 0)}"
+                             for n in g["replicas"]) + "]")
     tails = "  ".join(
         f"{t}: p95={s.batch_p(95, t)*1e3:.1f}ms"
         for t in sorted(s.tier_batch_latencies))

@@ -1,0 +1,123 @@
+"""Mesh builders: up-front validation and the replica mesh carver.
+
+The in-process tests run on this container's single CPU device, which is
+exactly the regime the validation bugfix targets: requesting a 16x16
+production mesh (or a 2x2 replica topology) used to die inside
+``jax.make_mesh`` with an opaque reshape error; now every builder raises a
+``ValueError`` naming required vs available device counts BEFORE touching
+jax.  The multi-device paths (carving a forced 8-device pool into replica
+groups) run in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` because the flag
+must be set before jax initializes its backends.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               make_replica_meshes, make_serve_mesh)
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run_forced(devices: int, body: str) -> str:
+    """Run a snippet in a subprocess with a forced CPU device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src")] +
+        env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+class TestValidation:
+    def test_production_mesh_error_names_both_counts(self):
+        with pytest.raises(ValueError) as e:
+            make_production_mesh()
+        msg = str(e.value)
+        assert "256" in msg and "1" in msg       # required vs available
+
+    def test_multi_pod_error_names_both_counts(self):
+        with pytest.raises(ValueError) as e:
+            make_production_mesh(multi_pod=True)
+        assert "512" in str(e.value)
+
+    def test_host_mesh_fits_one_device(self):
+        assert make_host_mesh().devices.size == 1
+
+    def test_serve_mesh_rejects_empty_pool(self):
+        with pytest.raises(ValueError):
+            make_serve_mesh([])
+
+    def test_replica_meshes_one_by_one_degrades_to_serve_mesh(self):
+        ms = make_replica_meshes(1, 1)
+        assert len(ms) == 1
+        assert ms[0].shape == make_serve_mesh().shape
+
+    def test_replica_meshes_reject_oversubscription(self):
+        with pytest.raises(ValueError) as e:
+            make_replica_meshes(2, 2)            # 4 groups, 1 device
+        msg = str(e.value)
+        assert "4" in msg and "1" in msg and "replica" in msg
+
+    def test_replica_meshes_reject_bad_shape(self):
+        with pytest.raises(ValueError):
+            make_replica_meshes(0, 1)
+        with pytest.raises(ValueError):
+            make_replica_meshes(1, -1)
+
+
+class TestForcedMultiDevice:
+    """Real carving over a forced 8-device CPU pool (subprocess: XLA_FLAGS
+    must precede jax backend init)."""
+
+    def test_carves_disjoint_equal_groups(self):
+        out = _run_forced(8, """
+            import jax
+            from repro.launch.mesh import make_replica_meshes
+            ms = make_replica_meshes(2, 2)
+            assert len(ms) == 4
+            seen = []
+            for m in ms:
+                devs = list(m.devices.flat)
+                assert len(devs) == 2, m
+                assert m.shape == {"data": 2, "model": 1}
+                seen += [d.id for d in devs]
+            assert sorted(seen) == [d.id for d in jax.local_devices()]
+            # host-major order: group g = h * replicas + r
+            assert seen == sorted(seen)
+            print("OK", len(ms))
+        """)
+        assert "OK 4" in out
+
+    def test_uneven_split_raises_named_error(self):
+        out = _run_forced(8, """
+            from repro.launch.mesh import make_replica_meshes
+            try:
+                make_replica_meshes(3, 1)
+            except ValueError as e:
+                assert "8" in str(e) and "3" in str(e), e
+                print("RAISED")
+        """)
+        assert "RAISED" in out
+
+    def test_pool_subset_and_full_serve_mesh(self):
+        out = _run_forced(8, """
+            import jax
+            from repro.launch.mesh import make_replica_meshes, make_serve_mesh
+            full = make_serve_mesh()
+            assert full.devices.size == 8
+            half = make_replica_meshes(1, 2, jax.local_devices()[:4])
+            assert [m.devices.size for m in half] == [2, 2]
+            print("OK")
+        """)
+        assert "OK" in out

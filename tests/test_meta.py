@@ -18,7 +18,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # 485 collected as of the fault-tolerance PR (deadlines, retry/failover,
 # circuit breaking, chaos fault model); small slack so a legitimate
 # parametrization tweak is not a CI incident
-FLOOR = 560
+FLOOR = 600
 
 
 def test_collected_test_count_never_regresses():

@@ -19,6 +19,7 @@ backlog exactly like the DES does after its same-instant arrival events.
 Runs under real ``hypothesis`` when installed, else the deterministic
 seeded stub in ``tests/_hypothesis_stub.py``.
 """
+import dataclasses
 import sys
 from collections import defaultdict
 
@@ -31,7 +32,7 @@ from repro.core.bucketing import length_bucket_fn
 from repro.core.cache import CACHE, cache_tier
 from repro.core.routing import (CascadePolicy, LeastLoadedPolicy,
                                 LengthAwarePolicy, PredictivePolicy,
-                                TierSpec)
+                                RoundRobinPolicy, TierSpec, replicate)
 from repro.core.simulator import (DeviceModel, ServingSimulator,
                                   sharded_model)
 from repro.core.windve import ModeledBackend, WindVE
@@ -381,4 +382,222 @@ def test_admission_preserves_served_embeddings_bitwise():
                                                 slo_s=100.0))
     assert on_disp == off_disp
     for a, b in zip(on_emb, off_emb):
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# multi-replica topologies: replicas are ordinary tiers, so BOTH drivers
+# must agree counter-for-counter PER REPLICA — including under the
+# replica-oblivious round-robin baseline and under seeded fault plans
+# pinned to one replica of a replica set.
+# ---------------------------------------------------------------------------
+
+def replica_specs(hosts, replicas, depth, max_batch=None):
+    """Expand one logical NPU tier into an H x R replica set, each replica
+    with a distinct flat service curve (so load-aware orderings are
+    non-trivial), and return (specs, models keyed by replica name)."""
+    specs = replicate(TierSpec("NPU", depth, max_batch=max_batch),
+                      hosts, replicas)
+    models = {t.name: DeviceModel(t.name, beta=0.05 + 0.02 * i, b=0.0,
+                                  a=0.0)
+              for i, t in enumerate(specs)}
+    return specs, models
+
+
+def make_replica_policy(kind, models):
+    if kind == "round-robin":
+        # stateful rotation counter: each driver gets its own instance
+        return RoundRobinPolicy()
+    return make_policy(kind, models)
+
+
+REPLICA_CONFIG = st.tuples(
+    st.integers(min_value=1, max_value=2),                  # hosts
+    st.integers(min_value=1, max_value=3),                  # replicas/host
+    st.integers(min_value=1, max_value=6),                  # replica depth
+    st.sampled_from(["cascade", "least-loaded", "predictive",
+                     "round-robin"]),
+    st.sampled_from([None, 2, 4]),                          # max_batch cap
+    st.lists(st.integers(min_value=5, max_value=400),       # query lengths
+             min_size=1, max_size=18),
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(REPLICA_CONFIG)
+def test_multi_replica_topology_parity(cfg):
+    """Random hosts x replicas topologies: routed counts, BUSY rejections,
+    completions, and per-replica batch multisets agree across drivers for
+    every policy — replica tiers are just tiers to the scheduling core."""
+    hosts, replicas, depth, policy_kind, max_batch, lengths = cfg
+    specs, models = replica_specs(hosts, replicas, depth, max_batch)
+
+    recorders = {n: RecordingModel(m) for n, m in models.items()}
+    des_tiers = [dataclasses.replace(t, model=recorders[t.name])
+                 for t in specs]
+    sim = ServingSimulator(tiers=des_tiers, slo_s=100.0,
+                           policy=make_replica_policy(policy_kind, models))
+    res = sim.run([(0.0, ln) for ln in lengths])
+    s_disp, s_rej, s_done = dict(res.dispatched), res.rejected, \
+        res.n_completed
+    s_batches = {n: sorted(r.batches) for n, r in recorders.items()
+                 if r.batches}
+
+    eng_tiers = [dataclasses.replace(
+        t, backend=ModeledBackend(models[t.name], embed_dim=4))
+        for t in specs]
+    ve = WindVE(tiers=eng_tiers,
+                policy=make_replica_policy(policy_kind, models))
+    seen = defaultdict(list)
+    ve.add_batch_hook(lambda tier, batch, lat: seen[tier].append(len(batch)))
+    old = sys.getswitchinterval()
+    try:
+        sys.setswitchinterval(5.0)
+        try:
+            futs = [ve.submit(length=ln) for ln in lengths]
+        finally:
+            sys.setswitchinterval(old)
+        done = [f.result(timeout=60) for f in futs if f is not None]
+        e_disp, e_rej = dict(ve.stats.dispatched), ve.stats.rejected
+    finally:
+        sys.setswitchinterval(old)
+        ve.shutdown()
+    e_batches = {t: sorted(b) for t, b in seen.items() if b}
+
+    assert e_disp == s_disp, (cfg, e_disp, s_disp)
+    assert e_rej == s_rej, (cfg, e_rej, s_rej)
+    assert len(done) == s_done == sum(s_disp.values())
+    assert e_batches == s_batches, (cfg, e_batches, s_batches)
+    # every dispatch landed on a real replica of the logical tier
+    assert set(e_disp) <= {t.name for t in specs}
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.tuples(
+    st.integers(min_value=1, max_value=2),            # hosts
+    st.integers(min_value=1, max_value=2),            # replicas/host
+    st.lists(st.integers(min_value=0, max_value=3),   # victim fail ordinals
+             min_size=0, max_size=3),
+    st.integers(min_value=0, max_value=2),            # max_retries
+    st.integers(min_value=4, max_value=10),           # burst size
+    st.sampled_from(["cascade", "predictive"]),
+))
+def test_multi_replica_fault_counters_per_replica(cfg):
+    """Seeded fault plan pinned to ONE replica of an H x R set: retries,
+    backend errors, breaker trips, failover dispatches, and terminal
+    failures must match counter-for-counter per replica across drivers —
+    a replica's breaker isolates that replica, its siblings absorb the
+    failover."""
+    from repro.core.faults import FaultModel, FaultPlan, FaultyBackend
+    from repro.core.health import CircuitBreaker
+    from repro.core.routing import RetryPolicy
+
+    hosts, replicas, fails, retries, n, policy_kind = cfg
+    plan = FaultPlan(fail=frozenset(fails))
+    retry = RetryPolicy(max_retries=retries, backoff_s=0.0)
+    depth = n + 4          # no BUSY: rejection never hangs on a clock race
+    specs, models = replica_specs(hosts, replicas, depth, max_batch=2)
+    victim = specs[0].name
+
+    def brk():
+        # cooldown far beyond any run: a trip stays a trip on either clock
+        return CircuitBreaker(failure_threshold=2, cooldown_s=1000.0)
+
+    def record(t):
+        out = {
+            "dispatched": dict(t.dispatched),
+            "rejected": t.rejected,
+            "retries": dict(t.retries),
+            "backend_errors": dict(t.backend_errors),
+            "breaker_trips": dict(t.breaker_trips),
+            "failed": t.failed,
+        }
+        return out
+
+    eng_tiers = [dataclasses.replace(
+        t, breaker=brk(),
+        backend=(FaultyBackend(ModeledBackend(models[t.name], embed_dim=4),
+                               plan=plan)
+                 if t.name == victim
+                 else ModeledBackend(models[t.name], embed_dim=4)))
+        for t in specs]
+    ve = WindVE(tiers=eng_tiers, retry=retry,
+                policy=make_replica_policy(policy_kind, models))
+    old = sys.getswitchinterval()
+    try:
+        sys.setswitchinterval(5.0)
+        try:
+            futs = [ve.submit(length=16) for _ in range(n)]
+        finally:
+            sys.setswitchinterval(old)
+        done = fail = 0
+        for f in futs:
+            if f is None:
+                continue
+            try:
+                f.result(timeout=30)
+                done += 1
+            except Exception:
+                fail += 1
+        eng = record(ve.stats)
+        eng["client_done"], eng["client_fail"] = done, fail
+    finally:
+        sys.setswitchinterval(old)
+        ve.shutdown()
+
+    des_tiers = [dataclasses.replace(t, breaker=brk(), model=models[t.name])
+                 for t in specs]
+    # nonzero failure-detection cost keeps the DES victim's server serial
+    # like the engine's worker thread: the retry re-dispatch lands BETWEEN
+    # consecutive batch failures on both clocks (at 0.0 two same-instant
+    # failures trip the breaker before the first retry re-dispatches)
+    sim = ServingSimulator(tiers=des_tiers, slo_s=100.0, retry=retry,
+                           policy=make_replica_policy(policy_kind, models),
+                           faults={victim: FaultModel(plan=plan,
+                                                      fail_latency_s=0.01)})
+    res = sim.run([(0.0, 16)] * n)
+    des = record(res)
+    des["client_done"], des["client_fail"] = res.n_completed, res.failed
+
+    assert eng == des, (cfg, eng, des)
+    assert eng["client_done"] + eng["client_fail"] == n
+    # faults never leak across replica boundaries: only the victim errors
+    assert set(eng["backend_errors"]) <= {victim}
+    assert set(eng["breaker_trips"]) <= {victim}
+
+
+def test_replicas_one_serves_bitwise_identical_to_plain_tier():
+    """``replicate(spec, 1, 1)`` is TODAY's path, bit for bit: a real jax
+    backend served through the degenerate replica set returns embeddings
+    bitwise identical to the un-replicated spec, with identical counters —
+    the replica layer must be invisible until it is asked for."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.windve import JaxEmbedderBackend
+    from repro.data.workload import make_queries
+    from repro.models import embedder
+
+    cfg = get_config("bge-large-zh-v1.5").smoke()
+    params = embedder.init_embedder(jax.random.PRNGKey(0), cfg)
+    payloads = make_queries(4, cfg.vocab_size, length=16, seed=7)
+    be = JaxEmbedderBackend(cfg, params, max_tokens=16)
+
+    def serve(tiers):
+        ve = WindVE(tiers=tiers)
+        try:
+            futs = [ve.submit(payload=p, length=16) for p in payloads]
+            assert all(f is not None for f in futs)
+            return [np.asarray(f.result(timeout=60)) for f in futs], \
+                dict(ve.stats.dispatched)
+        finally:
+            ve.shutdown()
+
+    plain_emb, plain_disp = serve([TierSpec("T0", 8, backend=be)])
+    rep = replicate(TierSpec("T0", 8, backend=be), hosts=1, replicas=1)
+    assert len(rep) == 1 and rep[0].name == "T0"    # no @h0r0 suffix at 1x1
+    rep_emb, rep_disp = serve(list(rep))
+
+    assert rep_disp == plain_disp == {"T0": len(payloads)}
+    for a, b in zip(rep_emb, plain_emb):
         assert a.dtype == b.dtype and np.array_equal(a, b)

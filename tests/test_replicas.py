@@ -1,0 +1,261 @@
+"""The multi-replica layer: replica-tagged TierSpecs, round-robin baseline,
+per-replica pricing helpers, and the utilization clamp.
+
+Replicas are ordinary tiers to the scheduler — that is the design — so
+these tests pin the parts that make them *replicas*: the expansion rules
+(``replicate`` / ``ReplicaSet``), the name <-> logical-tier mapping every
+roll-up depends on, the independently-failing-unit invariant (per-replica
+backends/breakers, never shared), the 1x1 bitwise degrade, and the
+closed-form pricing (``replica_fits`` / ``mesh_overhead`` /
+``replica_capacity``) the predictive router and the capacity planner read.
+"""
+import pytest
+
+from repro.core.estimator import fanout_probe_points, replica_fits
+from repro.core.cost_model import mesh_overhead, replica_capacity
+from repro.core.health import CircuitBreaker
+from repro.core.routing import (BUSY, CascadePolicy, Query, QueueManager,
+                                ReplicaSet, RoundRobinPolicy, TierSpec,
+                                dispatchable, replica_base, replica_name,
+                                replicate)
+from repro.core.simulator import (DeviceModel, FanOutModel, ServingSimulator,
+                                  sharded_model)
+from repro.core.telemetry import Telemetry
+
+
+def base_model(beta=0.05, b=0.01):
+    return DeviceModel("dev", beta=beta, b=b, a=0.0)
+
+
+class TestReplicate:
+    def test_one_by_one_is_the_original_spec(self):
+        # bitwise today's path: same object, same name, factories unread
+        spec = TierSpec("NPU", 4, model=base_model())
+        out = replicate(spec, 1, 1,
+                        backend=lambda h, r: pytest.fail("factory consulted"))
+        assert out == [spec] and out[0] is spec
+
+    def test_expansion_is_host_major_with_identity_tags(self):
+        spec = TierSpec("NPU", 4, model=base_model(), quantized=True)
+        out = replicate(spec, 2, 3)
+        assert [t.name for t in out] == [
+            replica_name("NPU", h, r) for h in range(2) for r in range(3)]
+        assert all(t.replica_of == "NPU" for t in out)
+        assert [t.host for t in out] == [0, 0, 0, 1, 1, 1]
+        # per-replica policy knobs copy through
+        assert all(t.depth == 4 and t.quantized for t in out)
+
+    def test_factories_build_independent_units(self):
+        # one backend / breaker INSTANCE per replica: a shared breaker
+        # would quarantine every replica when one host dies
+        spec = TierSpec("NPU", 4)
+        out = replicate(spec, 2, 2,
+                        model=lambda h, r: base_model(),
+                        breaker=lambda h, r: CircuitBreaker())
+        models = [t.model for t in out]
+        breakers = [t.breaker for t in out]
+        assert len(set(map(id, models))) == 4
+        assert len(set(map(id, breakers))) == 4
+
+    def test_rejects_bad_shapes_and_cache_tiers(self):
+        spec = TierSpec("NPU", 4)
+        with pytest.raises(ValueError):
+            replicate(spec, 0, 1)
+        with pytest.raises(ValueError):
+            replicate(spec, 1, 0)
+        with pytest.raises(ValueError):
+            replicate(TierSpec("C", 0, cache=object()), 2, 1)
+
+    def test_replica_base_round_trips(self):
+        assert replica_base(replica_name("NPU", 1, 0)) == "NPU"
+        assert replica_base(replica_name("CPU@big", 0, 7)) == "CPU@big"
+        assert replica_base("NPU") == "NPU"       # identity on plain tiers
+        assert replica_base("arrival") == "arrival"
+
+    def test_replica_set_lenses(self):
+        rs = ReplicaSet.build(TierSpec("NPU", 4, model=base_model()), 2, 2)
+        assert rs.base == "NPU" and len(rs) == 4
+        assert rs.names == [t.name for t in rs.specs]
+        assert [t.name for t in rs.on_host(1)] == ["NPU@h1r0", "NPU@h1r1"]
+        assert list(rs) == list(rs.specs)
+        one = ReplicaSet.build(TierSpec("NPU", 4), 1, 1)
+        assert one.names == ["NPU"]
+
+
+class TestReplicasAreFirstClassTiers:
+    """The scheduling core sees each replica as an independently-failing
+    capacity unit: its own queue slot accounting, its own breaker gate."""
+
+    def _tiers(self, depth=2, breakers=False):
+        return replicate(
+            TierSpec("NPU", depth, model=base_model()), 2, 2,
+            model=lambda h, r: base_model(),
+            breaker=(lambda h, r: CircuitBreaker(failure_threshold=1,
+                                                 cooldown_s=1e9))
+            if breakers else None)
+
+    def test_capacity_sums_over_replicas(self):
+        qm = QueueManager(self._tiers(depth=3))
+        assert qm.max_concurrency == 12
+        assert qm.degraded_max_concurrency == 12
+
+    def test_tripped_replica_leaves_siblings_dispatchable(self):
+        tiers = self._tiers(breakers=True)
+        qm = QueueManager(tiers)
+        qm.tier_failure("NPU@h0r1", now=0.0)
+        up = [t.name for t in dispatchable(qm.tiers)]
+        assert "NPU@h0r1" not in up and len(up) == 3
+        assert qm.tripped() == ["NPU@h0r1"]
+        # dispatch routes around the quarantined replica
+        for i in range(6):
+            assert qm.dispatch(Query(qid=i)) in up
+        assert qm.dispatch(Query(qid=99)) == BUSY
+        assert len(qm.queues["NPU@h0r1"]) == 0
+
+    def test_per_replica_telemetry_and_rollup(self):
+        qm = QueueManager(self._tiers())
+        for i in range(8):
+            qm.dispatch(Query(qid=i))
+        names = [t.name for t in qm.tiers]
+        assert sorted(qm.stats.dispatched) == sorted(names)
+        roll = qm.stats.replica_rollup()
+        assert set(roll) == {"NPU"}
+        assert roll["NPU"]["dispatched"] == 8
+        assert roll["NPU"]["replicas"] == sorted(names)
+        assert sum(roll["NPU"]["dispatched_by_replica"].values()) == 8
+
+    def test_des_runs_a_replica_topology(self):
+        tiers = replicate(TierSpec("NPU", 4, model=base_model()), 2, 2,
+                          model=lambda h, r: base_model())
+        sim = ServingSimulator(tiers=tiers, slo_s=1.0)
+        res = sim.run_burst(16)
+        assert res.accepted == 16 and res.n_completed == 16
+        assert sum(res.per_device.values()) == 16
+
+
+class TestRoundRobinPolicy:
+    def test_rotates_deterministically(self):
+        tiers = [TierSpec(n, 8, model=base_model()) for n in ("A", "B", "C")]
+        qm = QueueManager(tiers, policy=RoundRobinPolicy())
+        got = [qm.dispatch(Query(qid=i)) for i in range(6)]
+        assert got == ["A", "B", "C", "A", "B", "C"]
+
+    def test_skips_tripped_tiers(self):
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=1e9)
+        tiers = [TierSpec("A", 8, model=base_model(), breaker=br),
+                 TierSpec("B", 8, model=base_model())]
+        qm = QueueManager(tiers, policy=RoundRobinPolicy())
+        qm.tier_failure("A", now=0.0)
+        assert [qm.dispatch(Query(qid=i)) for i in range(3)] == ["B"] * 3
+
+    def test_empty_when_nothing_dispatchable(self):
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=1e9)
+        tiers = [TierSpec("A", 8, model=base_model(), breaker=br)]
+        qm = QueueManager(tiers, policy=RoundRobinPolicy())
+        qm.tier_failure("A", now=0.0)
+        assert qm.dispatch(Query(qid=0)) == BUSY
+
+
+class TestUtilizationClamp:
+    """Regression for the brownout over-drive bug: queued + in-flight can
+    stack above the live dispatchable capacity (a tripped tier shrinks the
+    denominator while retry/failover re-dispatch keeps the survivors full,
+    and an online ``set_depth`` can drop a tier's depth below its live
+    backlog) — ``utilization()`` must report a FRACTION, never > 1."""
+
+    def test_depth_shrink_below_live_backlog_clamps_to_one(self):
+        qm = QueueManager([TierSpec("NPU", 4, model=base_model())],
+                          policy=CascadePolicy())
+        for i in range(4):
+            assert qm.dispatch(Query(qid=i)) == "NPU"
+        assert len(qm.pop_batch("NPU")) == 4       # all in-flight
+        qm.set_depth("NPU", 2)                     # online recalibration
+        # raw load/cap would be 4/2 = 2.0
+        assert qm.utilization() == 1.0
+
+    def test_tripped_tier_plus_retry_backlog_stays_in_unit_interval(self):
+        brA = CircuitBreaker(failure_threshold=1, cooldown_s=1e9)
+        tiers = [TierSpec("A", 4, model=base_model(), breaker=brA),
+                 TierSpec("B", 4, model=base_model())]
+        qm = QueueManager(tiers, policy=CascadePolicy())
+        for i in range(4):
+            assert qm.dispatch(Query(qid=i)) == "A"
+        batch = qm.pop_batch("A")                  # in-flight on A
+        qm.tier_failure("A", now=0.0)              # A trips mid-batch
+        # failover re-dispatch fills the survivor to its watermark
+        for q in batch:
+            q.attempts += 1
+            assert qm.dispatch(q, now=0.1) == "B"
+        qm.set_depth("B", 2)    # survivor recalibrated below its backlog
+        u = qm.utilization()
+        assert 0.0 <= u <= 1.0 and u == 1.0
+
+    def test_brownout_ewma_not_overdriven_in_one_sample(self):
+        from repro.core.health import BrownoutController, NORMAL
+
+        qm = QueueManager([TierSpec("NPU", 4, model=base_model())])
+        for i in range(4):
+            qm.dispatch(Query(qid=i))
+        qm.pop_batch("NPU")
+        qm.set_depth("NPU", 1)                     # raw ratio would be 4.0
+        bo = BrownoutController(ewma_alpha=0.3)
+        bo.observe(0.0, 0.0)                       # calm history
+        # the clamped sample moves the EWMA by at most ewma_alpha * 1.0 —
+        # a raw 4.0 would jump it to 1.2, straight through the 0.9
+        # shedding threshold in a single dispatch
+        assert bo.observe(qm.utilization(), 0.0) == NORMAL
+        assert bo.utilization_ewma <= 0.3 + 1e-9
+
+    def test_fully_tripped_topology_reads_one(self):
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=1e9)
+        qm = QueueManager([TierSpec("A", 4, model=base_model(), breaker=br)])
+        qm.tier_failure("A", now=0.0)
+        assert qm.utilization() == 1.0
+
+
+class TestReplicaPricing:
+    def test_replica_fits_key_by_replica_name(self):
+        tiers = replicate(TierSpec("NPU", 4), 1, 2,
+                          model=lambda h, r: sharded_model(base_model(), 4))
+        fits = replica_fits({t.name: t.model for t in tiers},
+                            probe_points=fanout_probe_points(4))
+        assert set(fits) == {"NPU@h0r0", "NPU@h0r1"}
+        for f in fits.values():
+            assert f.alpha > 0 and f.max_concurrency(1.0) > 0
+
+    def test_replica_fits_price_degraded_replicas_individually(self):
+        healthy = sharded_model(base_model(), 8)
+        degraded = sharded_model(base_model(), 6)   # one host quarantined
+        fits = replica_fits({"NPU@h0r0": healthy, "NPU@h1r0": degraded},
+                            probe_points=fanout_probe_points(8))
+        assert fits["NPU@h1r0"].alpha > fits["NPU@h0r0"].alpha
+        assert fits["NPU@h1r0"].max_concurrency(1.0) < \
+            fits["NPU@h0r0"].max_concurrency(1.0)
+
+    def test_mesh_overhead_closed_form_matches_fanout_model(self):
+        f = FanOutModel(base_model(), 8, fanout_beta_s=0.01,
+                        hosts=2, interhost_beta_s=0.1)
+        assert mesh_overhead(0.01, 8, 0.1, 2) == pytest.approx(f.overhead_s)
+        assert mesh_overhead(0.01, 1) == 0.0
+        assert mesh_overhead(0.01, 8) == pytest.approx(0.03)
+        with pytest.raises(ValueError):
+            mesh_overhead(0.01, 8, 0.1, 3)
+
+    def test_replica_capacity(self):
+        assert replica_capacity(44, 4) == 176
+        assert replica_capacity(44, 4, down=1) == 132
+        assert replica_capacity(44, 4, down=4) == 0
+        with pytest.raises(ValueError):
+            replica_capacity(44, 4, down=5)
+        with pytest.raises(ValueError):
+            replica_capacity(-1, 4)
+
+
+def test_rollup_is_identity_shaped_on_plain_topologies():
+    t = Telemetry()
+    t.record_dispatch("NPU")
+    t.record_dispatch("CPU")
+    roll = t.replica_rollup()
+    assert set(roll) == {"NPU", "CPU"}
+    assert roll["NPU"]["replicas"] == ["NPU"]
+    assert roll["NPU"]["dispatched"] == 1

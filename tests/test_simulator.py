@@ -98,13 +98,56 @@ class TestFanOutModel:
         base = self._base()
         assert sharded_model(base, 1) is base     # bitwise PR 2 degrade
 
-    def test_rejects_non_pow2_and_single_device(self):
+    def test_rejects_single_device(self):
         from repro.core.simulator import FanOutModel
 
         with pytest.raises(ValueError):
-            FanOutModel(self._base(), 3)
-        with pytest.raises(ValueError):
             FanOutModel(self._base(), 1)
+
+    def test_degraded_non_pow2_mesh_is_plannable(self):
+        # a mid-outage replica mesh (one host quarantined: 8 -> 6 devices)
+        # must plan, not crash — chunks stay pow2 (floored at the largest
+        # pow2 that fits) and the straggler device takes ceil rows
+        from repro.core.simulator import FanOutModel
+
+        base = self._base()
+        f6 = FanOutModel(base, 6)
+        assert f6.chunk_floor == 4
+        assert f6.chunk_plan(20) == [16, 4]
+        # chunk 16 over 6 devices -> ceil(16/6) = 3 rows on the fullest
+        # device; chunk 4 -> 1 row
+        assert f6.latency(20) == pytest.approx(base.latency(3) +
+                                               base.latency(1))
+
+    def test_pow2_mesh_unchanged_by_degraded_planning(self):
+        # the degraded-mesh extension is bitwise inert at pow2 counts
+        from repro.core.simulator import FanOutModel
+
+        base = self._base()
+        f8 = FanOutModel(base, 8)
+        assert f8.chunk_floor == 8
+        for batch in (1, 8, 20, 64, 100):
+            assert f8.latency(batch) == pytest.approx(sum(
+                f8.overhead_s + base.latency(c // 8)
+                for c in f8.chunk_plan(batch)))
+
+    def test_interhost_gather_term(self):
+        # a replica group carved across hosts pays the cross-host gather
+        # on top of the intra-host tree; hosts=1 leaves overhead unchanged
+        from repro.core.simulator import FanOutModel, sharded_model
+
+        base = self._base()
+        f1h = FanOutModel(base, 8, fanout_beta_s=0.01)
+        f2h = FanOutModel(base, 8, fanout_beta_s=0.01,
+                          hosts=2, interhost_beta_s=0.1)
+        assert f1h.overhead_s == pytest.approx(0.03)
+        assert f2h.overhead_s == pytest.approx(0.03 + 0.1)
+        assert f2h.latency(8) == pytest.approx(base.latency(1) + 0.13)
+        assert "x2h" in f2h.name and "x2h" not in f1h.name
+        with pytest.raises(ValueError):
+            FanOutModel(base, 8, hosts=3)   # uneven split over hosts
+        s = sharded_model(base, 8, 0.01, hosts=2, interhost_beta_s=0.1)
+        assert s.overhead_s == pytest.approx(f2h.overhead_s)
 
     def test_chunk_plan_mirrors_bucketed_batch_plan(self):
         from repro.core.bucketing import BucketedEmbedderBackend
